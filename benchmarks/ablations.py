@@ -1,0 +1,95 @@
+"""TORTA component ablations (beyond-paper): isolate the contribution of
+each mechanism the paper stacks — temporal smoothing (eta), the demand
+predictor, warm-model locality, Eq-6 activation headroom, and the sticky
+macro apportionment.
+
+  PYTHONPATH=src python -m benchmarks.ablations
+"""
+from __future__ import annotations
+
+import copy
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import fmt_table, save_results
+
+
+def run(*, slots: int = 80, util: float = 0.35, topology: str = "abilene",
+        verbose: bool = True) -> List[Dict]:
+    import repro.core.micro as micro
+    from repro.core.torta import TortaScheduler
+    from repro.sim import Engine, make_cluster, make_topology, make_workload
+    from repro.sim.cluster import throughput_per_slot
+
+    topo = make_topology(topology, seed=1)
+    r = topo.n_regions
+    cluster0 = make_cluster(r, seed=3)
+    rate = util * throughput_per_slot(cluster0) / r
+    wl = make_workload(slots, r, seed=2, base_rate=rate)
+
+    variants = [
+        ("full", {}),
+        ("no-smoothing (eta=1)", {"eta": 1.0}),
+        ("heavy-smoothing (eta=0.1)", {"eta": 0.1}),
+        ("no-prediction", {"prediction_noise": 1.0}),
+        ("tight-activation (hr=1)", {"headroom": 1.0}),
+        ("loose-activation (hr=6)", {"headroom": 6.0}),
+        ("sticky-distribution", {"distribution": "sticky"}),
+    ]
+    out = []
+    for name, kw in variants:
+        sched = TortaScheduler(r, seed=0, **kw)
+        eng = Engine(topo, copy.deepcopy(cluster0), wl, sched, seed=4)
+        s = eng.run().summary()
+        rec = {"variant": name, **{k: s[k] for k in (
+            "mean_response_s", "p95_response_s", "load_balance",
+            "power_cost_total", "model_switches", "operational_overhead",
+            "completion_rate")}}
+        out.append(rec)
+        if verbose:
+            print(f"  {name:26s} resp={s['mean_response_s']:7.2f} "
+                  f"LB={s['load_balance']:.3f} "
+                  f"power=${s['power_cost_total']:.2f} "
+                  f"sw={s['model_switches']}", flush=True)
+
+    # no-warm-locality: zero the warm bonus at module level
+    orig = micro.W_WARM
+    try:
+        micro.W_WARM = 0.0
+        sched = TortaScheduler(r, seed=0)
+        eng = Engine(topo, copy.deepcopy(cluster0), wl, sched, seed=4)
+        s = eng.run().summary()
+        rec = {"variant": "no-warm-locality", **{k: s[k] for k in (
+            "mean_response_s", "p95_response_s", "load_balance",
+            "power_cost_total", "model_switches", "operational_overhead",
+            "completion_rate")}}
+        out.append(rec)
+        if verbose:
+            print(f"  {'no-warm-locality':26s} resp={s['mean_response_s']:7.2f} "
+                  f"LB={s['load_balance']:.3f} power=${s['power_cost_total']:.2f} "
+                  f"sw={s['model_switches']}", flush=True)
+    finally:
+        micro.W_WARM = orig
+    return out
+
+
+def table(rows: List[Dict]) -> str:
+    return fmt_table(
+        ["variant", "resp_s", "p95_s", "LB", "power_$", "switches", "ovh"],
+        [[x["variant"], f"{x['mean_response_s']:.2f}",
+          f"{x['p95_response_s']:.1f}", f"{x['load_balance']:.3f}",
+          f"{x['power_cost_total']:.2f}", f"{x['model_switches']:.0f}",
+          f"{x['operational_overhead']:.2f}"] for x in rows],
+        "TORTA component ablations (abilene)")
+
+
+def main():
+    rows = run()
+    save_results("ablations", rows)
+    print()
+    print(table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Shared experiment harness for the paper-figure benchmarks.
+
+One simulation matrix (topology x scheduler) is run once and cached in
+memory/JSON; every figure-benchmark formats its slice.  Workload intensity
+is calibrated to ~35% fleet utilization (the regime where scheduling
+matters but baselines remain functional, §VI-A)."""
+from __future__ import annotations
+
+import copy
+import json
+import pathlib
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parent / "results"
+
+TOPOLOGIES = ["abilene", "polska", "gabriel", "cost2"]
+
+
+def make_schedulers(n_regions: int, extra: Optional[dict] = None):
+    from repro.baselines import (ReactiveOTScheduler, RoundRobinScheduler,
+                                 SDIBScheduler, SkyLBScheduler)
+    from repro.core.torta import TortaScheduler
+    scheds = {
+        "TORTA": TortaScheduler(n_regions, seed=0, **(extra or {})),
+        "SkyLB": SkyLBScheduler(),
+        "SDIB": SDIBScheduler(),
+        "RR": RoundRobinScheduler(),
+        "ReactiveOT": ReactiveOTScheduler(n_regions),
+    }
+    return scheds
+
+
+def run_matrix(*, slots: int = 120, seeds=(0,), util: float = 0.35,
+               topologies=None, schedulers=None, failures=None,
+               verbose: bool = True) -> Dict:
+    """Returns {topology: {scheduler: summary-dict-with-extras}}."""
+    from repro.sim import Engine, make_cluster, make_topology, make_workload
+    from repro.sim.cluster import throughput_per_slot
+
+    out: Dict[str, Dict] = {}
+    for topo_name in (topologies or TOPOLOGIES):
+        topo = make_topology(topo_name, seed=1)
+        r = topo.n_regions
+        cluster0 = make_cluster(r, seed=3)
+        rate = util * throughput_per_slot(cluster0) / r
+        out[topo_name] = {}
+        for seed in seeds:
+            wl = make_workload(slots, r, seed=2 + seed, base_rate=rate)
+            scheds = make_schedulers(r)
+            if schedulers:
+                scheds = {k: v for k, v in scheds.items() if k in schedulers}
+            for name, sched in scheds.items():
+                cl = copy.deepcopy(cluster0)
+                t0 = time.time()
+                eng = Engine(topo, cl, wl, sched, seed=4 + seed,
+                             failures=failures)
+                agg = eng.run()
+                s = agg.summary()
+                s["decision_time_s"] = time.time() - t0
+                s["response_times"] = np.percentile(
+                    agg.response_times, [5, 25, 50, 75, 90, 95, 99]).tolist()
+                s["lb_series"] = [float(x) for x in agg.lb_by_slot[::4]]
+                prev = out[topo_name].get(name)
+                out[topo_name][name] = _merge(prev, s)
+                if verbose:
+                    print(f"  [{topo_name}] {name:10s} "
+                          f"resp={s['mean_response_s']:8.2f}s "
+                          f"LB={s['load_balance']:.3f} "
+                          f"power=${s['power_cost_total']:.2f} "
+                          f"ovh={s['operational_overhead']:.2f}", flush=True)
+    return out
+
+
+def _merge(prev, s):
+    if prev is None:
+        s = dict(s)
+        s["_n"] = 1
+        return s
+    n = prev["_n"]
+    out = dict(prev)
+    for k, v in s.items():
+        if isinstance(v, (int, float)) and k in prev:
+            out[k] = (prev[k] * n + v) / (n + 1)
+    out["_n"] = n + 1
+    return out
+
+
+def save_results(name: str, data) -> pathlib.Path:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    fn = RESULTS_DIR / f"{name}.json"
+    fn.write_text(json.dumps(data, indent=1, default=float))
+    return fn
+
+
+def load_results(name: str):
+    fn = RESULTS_DIR / f"{name}.json"
+    if fn.exists():
+        return json.loads(fn.read_text())
+    return None
+
+
+def fmt_table(headers: List[str], rows: List[List], title: str = "") -> str:
+    w = [max(len(str(h)), max((len(str(r[i])) for r in rows), default=0))
+         for i, h in enumerate(headers)]
+    lines = []
+    if title:
+        lines.append(f"## {title}")
+    lines.append(" | ".join(str(h).ljust(w[i]) for i, h in enumerate(headers)))
+    lines.append("-|-".join("-" * w[i] for i in range(len(headers))))
+    for r in rows:
+        lines.append(" | ".join(str(c).ljust(w[i]) for i, c in enumerate(r)))
+    return "\n".join(lines)

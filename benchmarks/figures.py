@@ -1,0 +1,63 @@
+"""Paper-figure benchmark formatters (Figs 8, 9, 10, 11) over the shared
+simulation matrix."""
+from __future__ import annotations
+
+from typing import Dict
+
+from benchmarks.common import fmt_table
+
+
+def fig8_response_time(matrix: Dict) -> str:
+    """Fig 8: response-time distributions across topologies."""
+    rows = []
+    for topo, per in matrix.items():
+        for name, s in per.items():
+            p = s["response_times"]
+            rows.append([topo, name, f"{s['mean_response_s']:.2f}",
+                         f"{p[2]:.2f}", f"{p[5]:.2f}", f"{p[6]:.2f}"])
+    return fmt_table(["topology", "scheduler", "mean_s", "p50_s", "p95_s",
+                      "p99_s"], rows, "Fig 8 — response time")
+
+
+def fig9_power_cost(matrix: Dict) -> str:
+    """Fig 9: power cost + operational overhead."""
+    rows = []
+    for topo, per in matrix.items():
+        base = per.get("SkyLB", next(iter(per.values())))
+        for name, s in per.items():
+            dp = (1 - s["power_cost_total"] /
+                  max(base["power_cost_total"], 1e-9)) * 100
+            rows.append([topo, name, f"{s['power_cost_total']:.2f}",
+                         f"{dp:+.1f}%", f"{s['operational_overhead']:.2f}",
+                         f"{s['model_switches']:.0f}",
+                         f"{s['switch_cost_total']:.2f}"])
+    return fmt_table(["topology", "scheduler", "power_$", "vs_SkyLB",
+                      "op_overhead", "model_switches", "C_switch(F-norm)"],
+                     rows, "Fig 9 — power cost and operational overhead")
+
+
+def fig10_load_balance(matrix: Dict) -> str:
+    """Fig 10: load-balance coefficient (Eq 11)."""
+    rows = []
+    for topo, per in matrix.items():
+        for name, s in per.items():
+            import numpy as np
+            series = np.array(s.get("lb_series", [s["load_balance"]]))
+            rows.append([topo, name, f"{s['load_balance']:.3f}",
+                         f"{np.percentile(series, 10):.3f}",
+                         f"{np.percentile(series, 90):.3f}"])
+    return fmt_table(["topology", "scheduler", "LB_mean", "LB_p10", "LB_p90"],
+                     rows, "Fig 10 — load balance coefficient")
+
+
+def fig11_breakdown(matrix: Dict) -> str:
+    """Fig 11: waiting / inference / network decomposition."""
+    rows = []
+    for topo, per in matrix.items():
+        for name, s in per.items():
+            rows.append([topo, name, f"{s['mean_wait_s']:.2f}",
+                         f"{s['mean_work_s']:.2f}", f"{s['mean_net_s']:.3f}",
+                         f"{s['completion_rate']:.3f}"])
+    return fmt_table(["topology", "scheduler", "wait_s", "inference_s",
+                      "network_s", "completion"], rows,
+                     "Fig 11 — response-time breakdown")

@@ -1,0 +1,79 @@
+"""Kernel micro-benchmarks: us/call for the jitted jnp oracles on this CPU
+(the Pallas kernels are TPU-targeted; interpret mode is a correctness tool,
+not a performance path — see EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, iters=20) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> List[str]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    from repro.kernels.flash_decode.ref import flash_decode_ref
+    b, kh, g, hd, c = 8, 8, 4, 128, 4096
+    q = jnp.asarray(rng.standard_normal((b, kh, g, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, c, kh, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, c, kh, hd)), jnp.float32)
+    valid = jnp.ones((b, c), jnp.int32)
+    f = jax.jit(flash_decode_ref)
+    rows.append(("kernel_flash_decode_ref_b8_c4096",
+                 _time(f, q, k, v, valid), "oracle, CPU"))
+
+    from repro.kernels.selective_scan.ref import selective_scan_ref
+    b2, s, d, n = 2, 512, 256, 16
+    args = (jnp.asarray(rng.random((b2, s, d)) * 0.1, jnp.float32),
+            jnp.asarray(rng.standard_normal((b2, s, n)), jnp.float32),
+            jnp.asarray(rng.standard_normal((b2, s, n)), jnp.float32),
+            jnp.asarray(rng.standard_normal((b2, s, d)), jnp.float32),
+            jnp.asarray(-rng.random((d, n)), jnp.float32),
+            jnp.asarray(rng.random(d), jnp.float32))
+    f = jax.jit(selective_scan_ref)
+    rows.append(("kernel_selective_scan_ref_s512_d256",
+                 _time(f, *args), "oracle, CPU"))
+
+    from repro.kernels.flash_prefill.ref import flash_prefill_ref
+    bp, kp, gp, sp, hp = 2, 4, 4, 1024, 128
+    qp = jnp.asarray(rng.standard_normal((bp, kp, gp, sp, hp)), jnp.float32)
+    kpp = jnp.asarray(rng.standard_normal((bp, kp, sp, hp)), jnp.float32)
+    vpp = jnp.asarray(rng.standard_normal((bp, kp, sp, hp)), jnp.float32)
+    f = jax.jit(flash_prefill_ref)
+    rows.append(("kernel_flash_prefill_ref_s1024",
+                 _time(f, qp, kpp, vpp), "oracle, CPU"))
+
+    from repro.core.ot import sinkhorn
+    bb, r = 64, 24
+    mu = rng.random((bb, r)) + 0.05
+    mu /= mu.sum(1, keepdims=True)
+    nu = rng.random((bb, r)) + 0.05
+    nu /= nu.sum(1, keepdims=True)
+    cost = jnp.asarray(rng.random((bb, r, r)), jnp.float32)
+    f = jax.jit(lambda m, n2, c2: sinkhorn(m, n2, c2, n_iters=100))
+    rows.append(("kernel_sinkhorn_ref_b64_r24",
+                 _time(f, jnp.asarray(mu, jnp.float32),
+                       jnp.asarray(nu, jnp.float32), cost), "oracle, CPU"))
+
+    from repro.kernels.compat_score.ref import compat_score_ref
+    n_t, n_s = 2048, 512
+    tf_ = jnp.asarray(rng.random((n_t, 8)), jnp.float32)
+    sf_ = jnp.asarray(rng.random((n_s, 8)) + 0.1, jnp.float32)
+    loc = jnp.asarray(rng.random((n_t, n_s)), jnp.float32)
+    f = jax.jit(compat_score_ref)
+    rows.append(("kernel_compat_score_ref_2048x512",
+                 _time(f, tf_, sf_, loc), "oracle, CPU"))
+    return [f"{n},{t:.1f},{d}" for n, t, d in rows]

@@ -1,0 +1,51 @@
+"""Fig 5: MILP solve time vs task count (the scalability wall motivating the
+two-layer decomposition), compared with TORTA's per-slot decision time."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import fmt_table
+
+
+def run(task_counts=(50, 100, 200, 400, 800), *, time_limit: float = 120.0,
+        verbose=True) -> List[Dict]:
+    from repro.baselines.milp import make_instance, solve
+    out = []
+    for n in task_counts:
+        inst = make_instance(n, n_regions=5, servers_per_region=10, seed=0)
+        res = solve(inst, time_limit=time_limit)
+        out.append({"tasks": n, "solve_time_s": res["solve_time_s"],
+                    "success": res["success"]})
+        if verbose:
+            print(f"  MILP n={n}: {res['solve_time_s']:.3f}s "
+                  f"(ok={res['success']})", flush=True)
+        if res["solve_time_s"] > time_limit:
+            break
+    return out
+
+
+def torta_decision_time(n_tasks: int = 800, n_regions: int = 5) -> float:
+    """Per-slot TORTA decision latency on a same-size instance."""
+    import copy
+    from repro.core.torta import TortaScheduler
+    from repro.sim import Engine, make_cluster, make_topology, make_workload
+    topo = make_topology("abilene", seed=1)
+    cluster = make_cluster(topo.n_regions, seed=3)
+    wl = make_workload(3, topo.n_regions, seed=2,
+                       base_rate=n_tasks / topo.n_regions)
+    sched = TortaScheduler(topo.n_regions, seed=0)
+    eng = Engine(topo, copy.deepcopy(cluster), wl, sched, seed=4)
+    t0 = time.time()
+    eng.run(3)
+    return (time.time() - t0) / 3
+
+
+def fig5_table(milp_rows: List[Dict], torta_s: float) -> str:
+    rows = [[r["tasks"], f"{r['solve_time_s']:.3f}", r["success"]]
+            for r in milp_rows]
+    t = fmt_table(["tasks", "MILP_solve_s", "optimal"], rows,
+                  "Fig 5 — MILP solve time (HiGHS, 5 regions x 10 servers)")
+    return t + f"\nTORTA per-slot decision time at 800 tasks: {torta_s:.3f}s"

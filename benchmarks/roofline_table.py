@@ -1,0 +1,54 @@
+"""§Roofline table: read the dry-run JSON records and render the per-(arch x
+mesh) roofline terms, bottleneck, and useful-FLOP fraction."""
+from __future__ import annotations
+
+import glob
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+from benchmarks.common import RESULTS_DIR, fmt_table
+
+DRYRUN_DIR = RESULTS_DIR / "dryrun"
+
+
+def load(mesh: str = "single", directory=None) -> List[Dict]:
+    d = pathlib.Path(directory) if directory else DRYRUN_DIR
+    out = []
+    for fn in sorted(d.glob(f"*_{mesh}.json")):
+        r = json.loads(fn.read_text())
+        if r.get("status") == "ok":
+            out.append(r)
+    return out
+
+
+def table(mesh: str = "single", directory=None) -> str:
+    recs = load(mesh, directory)
+    rows = []
+    for r in recs:
+        rl = r["roofline"]
+        mem = r.get("memory", {})
+        hbm = mem.get("total_hbm_bytes")
+        rows.append([
+            r["arch"], r["shape"], r.get("variant", ""),
+            f"{rl['compute_s']:.4f}", f"{rl['memory_s']:.4f}",
+            f"{rl['collective_s']:.4f}", rl["bottleneck"],
+            f"{rl['useful_flop_frac']:.2f}",
+            f"{hbm / 1e9:.1f}" if hbm else "-",
+            f"{r['compile_s']:.0f}s",
+        ])
+    return fmt_table(
+        ["arch", "shape", "variant", "compute_s", "memory_s", "collective_s",
+         "bottleneck", "useful", "HBM_GB/chip", "compile"],
+        rows, f"Roofline — {mesh}-pod mesh "
+              f"({recs[0]['chips'] if recs else '?'} chips)")
+
+
+def summary_counts(mesh: str = "single") -> Dict[str, int]:
+    recs = load(mesh)
+    out: Dict[str, int] = {}
+    for r in recs:
+        b = r["roofline"]["bottleneck"]
+        out[b] = out.get(b, 0) + 1
+    out["total"] = len(recs)
+    return out

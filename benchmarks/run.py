@@ -1,0 +1,110 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines for machine parsing, followed
+by the human-readable figure tables.
+
+  PYTHONPATH=src python -m benchmarks.run              # standard run
+  PYTHONPATH=src python -m benchmarks.run --quick      # CI-sized
+  PYTHONPATH=src python -m benchmarks.run --full       # 480-slot, 3 seeds
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--topologies", nargs="*", default=None)
+    args = ap.parse_args()
+
+    if args.quick:
+        slots, seeds, topos = 40, (0,), ["abilene"]
+        noises = (0.0, 0.5, 0.95)
+        milp_counts = (50, 100, 200)
+    elif args.full:
+        slots, seeds, topos = 480, (0, 1, 2), None
+        noises = (0.0, 0.25, 0.5, 0.75, 0.95)
+        milp_counts = (50, 100, 200, 400, 800, 1600)
+    else:
+        slots, seeds, topos = 120, (0,), None
+        noises = (0.0, 0.5, 0.95)
+        milp_counts = (50, 100, 200, 400)
+    topos = args.topologies or topos
+
+    from benchmarks import figures, kernels_bench, milp_solvetime
+    from benchmarks import prediction_accuracy as pa
+    from benchmarks import roofline_table, switching_cost
+    from benchmarks.common import run_matrix, save_results
+
+    t_all = time.time()
+    print("name,us_per_call,derived")
+
+    # ---- kernel micro-benches (CSV contract) ----
+    for line in kernels_bench.run():
+        print(line, flush=True)
+
+    # ---- shared simulation matrix (Figs 8-11) ----
+    print(f"\n# simulation matrix: slots={slots} seeds={len(seeds)} "
+          f"topologies={topos or 'all'}", flush=True)
+    t0 = time.time()
+    matrix = run_matrix(slots=slots, seeds=seeds, topologies=topos)
+    save_results("sim_matrix", matrix)
+    print(f"sim_matrix,{(time.time()-t0)*1e6:.0f},slots={slots}")
+    for topo, per in matrix.items():
+        for name, s in per.items():
+            print(f"sim_{topo}_{name},"
+                  f"{s['decision_time_s'] * 1e6 / max(slots,1):.0f},"
+                  f"resp={s['mean_response_s']:.2f}s;"
+                  f"lb={s['load_balance']:.3f};"
+                  f"power={s['power_cost_total']:.2f}")
+
+    print()
+    print(figures.fig8_response_time(matrix))
+    print()
+    print(figures.fig9_power_cost(matrix))
+    print()
+    print(figures.fig10_load_balance(matrix))
+    print()
+    print(figures.fig11_breakdown(matrix))
+
+    # ---- Fig 12 prediction accuracy ----
+    print("\n# Fig 12 sweep", flush=True)
+    res12 = pa.run(slots=max(slots // 2, 30), noises=noises, verbose=True)
+    save_results("fig12", res12)
+    print()
+    print(pa.fig12_table(res12))
+
+    # ---- Fig 5 MILP ----
+    print("\n# Fig 5 MILP solve times", flush=True)
+    milp_rows = milp_solvetime.run(milp_counts)
+    torta_s = milp_solvetime.torta_decision_time()
+    save_results("fig5", {"milp": milp_rows, "torta_s": torta_s})
+    for r in milp_rows:
+        print(f"milp_{r['tasks']}tasks,{r['solve_time_s']*1e6:.0f},"
+              f"optimal={r['success']}")
+    print()
+    print(milp_solvetime.fig5_table(milp_rows, torta_s))
+
+    # ---- Fig 3 switching-cost model ----
+    print()
+    print(switching_cost.fig3_table())
+
+    # ---- Roofline tables (from the dry-run artifacts) ----
+    for mesh in ("single", "multi"):
+        try:
+            print()
+            print(roofline_table.table(mesh))
+            print(f"bottleneck counts: {roofline_table.summary_counts(mesh)}")
+        except Exception as e:  # dry-run not yet executed
+            print(f"(roofline {mesh}: no dry-run records: {e})")
+
+    print(f"\ntotal_bench,{(time.time()-t_all)*1e6:.0f},seconds="
+          f"{time.time()-t_all:.0f}")
+
+
+if __name__ == "__main__":
+    main()

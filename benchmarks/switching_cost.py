@@ -1,0 +1,25 @@
+"""Fig 3: model-switch / migration stage costs per GPU type, and the measured
+per-switch overhead realized in simulation."""
+from __future__ import annotations
+
+from benchmarks.common import fmt_table
+
+
+def fig3_table() -> str:
+    from repro.sim.cluster import (GPU_TYPES, MIGRATION_STAGES_S,
+                                   MODEL_SWITCH_S, MIGRATION_S,
+                                   SWITCH_STAGES_S)
+    rows = []
+    for gpu, spec in GPU_TYPES.items():
+        scale = spec[5]
+        rows.append([gpu, f"{scale:.2f}",
+                     f"{scale * MODEL_SWITCH_S:.1f}",
+                     f"{scale * MIGRATION_S:.1f}",
+                     f"{spec[2]}"])
+    t = fmt_table(["gpu", "scale_vs_V100", "model_switch_s", "migration_s",
+                   "power_W"], rows,
+                  "Fig 3 — switching/migration cost model")
+    stages = ", ".join(f"{k}={v}s" for k, v in SWITCH_STAGES_S.items())
+    mig = ", ".join(f"{k}={v}s" for k, v in MIGRATION_STAGES_S.items())
+    return (t + f"\nV100 switch stages: {stages}"
+              + f"\nV100 migration stages: {mig}")

@@ -1,0 +1,28 @@
+"""Run the multi-pod dry-run for one (arch x shape) and print the roofline
+terms — a thin wrapper over repro.launch.dryrun (which must own the process
+so the 512 fake-device XLA flag lands before jax initializes).
+
+    PYTHONPATH=src python examples/dryrun_demo.py --arch llama3-8b --shape decode_32k --mesh multi
+"""
+import argparse
+import os
+import subprocess
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    args = ap.parse_args()
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", args.arch, "--shape", args.shape, "--mesh", args.mesh]
+    raise SystemExit(subprocess.call(cmd, env=env, cwd=root))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Offline TORTA training (Algorithm 2): demand predictor + PPO policy with
+OT supervision and the Thm-3 constraint terms, then evaluation of the
+trained policy inside the full simulator.
+
+    PYTHONPATH=src python examples/train_rl_policy.py [--iters 30]
+"""
+import argparse
+import copy
+
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.core.env import make_env_params
+from repro.core.ppo import PPOTrainer
+from repro.core.predictor import PredictorTrainer, make_dataset
+from repro.core.theory import estimate_k0_from_reactive
+from repro.core.torta import TortaScheduler
+from repro.sim import Engine, make_cluster, make_topology, make_workload
+from repro.sim.cluster import throughput_per_slot
+from repro.sim.metrics import prediction_accuracy
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=25)
+    ap.add_argument("--ckpt", default="checkpoints/torta_policy")
+    args = ap.parse_args()
+
+    topo = make_topology("abilene", seed=1)
+    r = topo.n_regions
+    cluster = make_cluster(r, seed=3)
+    rate = 0.35 * throughput_per_slot(cluster) / r
+    train_wl = make_workload(160, r, seed=11, base_rate=rate)
+    traffic = train_wl.arrivals_matrix().astype(np.float32)
+    cap = np.array([reg.total_capacity for reg in cluster.regions])
+    power = cluster.power_prices()
+
+    # ---- 1. offline predictor training (Appendix B) ----
+    util = np.clip(traffic / traffic.max(), 0, 1)
+    queue = np.zeros_like(traffic)
+    hist, target = make_dataset(traffic, util, queue)
+    pred = PredictorTrainer(r, seed=0)
+    losses = pred.fit(hist, target, epochs=40)
+    pa = prediction_accuracy(pred(hist[-40:]), target[-40:])
+    print(f"[predictor] mse {losses[0]:.4f} -> {losses[-1]:.4f}  "
+          f"accuracy(Eq12)={pa:.3f}")
+
+    # ---- 2. baseline parameters for the theoretical condition ----
+    k0 = estimate_k0_from_reactive(r, traffic, cap, power, topo.latency)
+    print(f"[theory] K0 (reactive switching, Thm 2) = {k0:.4f}")
+
+    # ---- 3. PPO with OT supervision + constraints (Algorithm 2) ----
+    env = make_env_params(cap, power, topo.latency, traffic)
+    trainer = PPOTrainer(env, r, n_envs=16, n_steps=64, seed=0, k0=k0)
+    hist_rl = trainer.train(args.iters, verbose=False)
+    for h in hist_rl[:: max(args.iters // 6, 1)]:
+        print(f"[ppo] it={h['iter']:3d} reward={h['reward']:.3f} "
+              f"ot_dev={h['ot_dev']:.3f} s={h['s_current']:.2f} "
+              f"cond={h['advantage_condition']}")
+    save_checkpoint(args.ckpt, args.iters,
+                    {"policy": trainer.params, "predictor": pred.params})
+    print(f"[ckpt] saved to {args.ckpt}")
+
+    # ---- 4. evaluate in the full simulator ----
+    eval_wl = make_workload(80, r, seed=12, base_rate=rate)
+    for name, sched in [
+        ("TORTA(policy)", TortaScheduler(r, seed=0,
+                                         policy_params=trainer.params,
+                                         predictor=pred)),
+        ("TORTA(OT-smoothed)", TortaScheduler(r, seed=0, predictor=pred)),
+    ]:
+        eng = Engine(topo, copy.deepcopy(cluster), eval_wl, sched, seed=4)
+        s = eng.run().summary()
+        print(f"[eval] {name:20s} resp={s['mean_response_s']:.2f}s "
+              f"LB={s['load_balance']:.3f} power=${s['power_cost_total']:.2f} "
+              f"switches={s['model_switches']}")
+
+
+if __name__ == "__main__":
+    main()

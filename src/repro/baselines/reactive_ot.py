@@ -1,0 +1,67 @@
+"""Reactive-OT baseline: the single-timeslot performance upper bound of
+Thm 1 — per-slot optimal transport on the CURRENT state only (no prediction,
+no temporal smoothing), with the same micro layer as TORTA.  This is the
+method-class whose switching cost converges to K0 (Thm 2); theory.py
+estimates K0 from its trajectories."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.macro import MacroAllocator
+from repro.core.micro import MicroAllocator
+from repro.sim.engine import SlotDecision, SlotObs
+from repro.sim.workload import Task
+
+
+@dataclasses.dataclass
+class ReactiveOTScheduler:
+    n_regions: int
+    seed: int = 0
+    name: str = "ReactiveOT"
+
+    def __post_init__(self):
+        self.macro = MacroAllocator(self.n_regions, eta=1.0)  # no smoothing
+        self.micro = MicroAllocator()
+        self.rng = np.random.default_rng(self.seed)
+        self.a_hist: List[np.ndarray] = []
+
+    def reset(self) -> None:
+        self.__post_init__()
+
+    def schedule(self, obs: SlotObs, tasks: List[Task]) -> SlotDecision:
+        r = self.n_regions
+        demand = np.zeros(r)
+        for t in tasks:
+            demand[t.origin] += 1
+        cap = np.maximum(obs.capacities - obs.queue_tasks,
+                         0.05 * np.maximum(obs.capacities, 1e-6))
+        # pure per-slot OT: current demand only (memoryless, Definition 1)
+        probs = self.macro.ot_plan(np.maximum(demand, 1e-3), cap,
+                                  obs.power_prices, obs.latency)
+        self.a_hist.append(probs.copy())
+        by_region: Dict[int, List[Task]] = {j: [] for j in range(r)}
+        for task in tasks:
+            p = probs[task.origin] * (obs.capacities > 0)
+            if p.sum() <= 0:
+                p = np.ones(r)
+            p = p / p.sum()
+            by_region[int(self.rng.choice(r, p=p))].append(task)
+        assignments = {}
+        activation = {}
+        inbound = probs.T @ demand
+        for j in range(r):
+            # reactive activation: current queue only, no forecast
+            activation[j] = self.micro.activation_target(obs, j,
+                                                         float(inbound[j]))
+            assignments.update(self.micro.assign_region(obs, j, by_region[j]))
+        return SlotDecision(assignments=assignments, activation=activation)
+
+    def switching_costs(self) -> np.ndarray:
+        """||A_t - A_{t-1}||_F^2 series — feeds theory.estimate_k0."""
+        if len(self.a_hist) < 2:
+            return np.zeros(1)
+        return np.array([float(np.sum((a2 - a1) ** 2))
+                         for a1, a2 in zip(self.a_hist, self.a_hist[1:])])

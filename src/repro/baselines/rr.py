@@ -1,0 +1,80 @@
+"""Round-Robin baseline (paper §VI-A): round-robin over regions and over
+servers within each region, "while maintaining necessary capacity and
+compatibility constraints" — compatibility includes the loaded model:
+rotation happens within per-model replica pools, growing a pool only when
+its replicas are saturated (otherwise a literal per-task rotation would
+strawman the baseline with a model switch per task)."""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.sim.engine import SlotDecision, SlotObs
+from repro.sim.workload import Task
+
+
+class RoundRobinScheduler:
+    name = "RR"
+
+    def __init__(self, saturation_slots: float = 2.0):
+        self.saturation_slots = saturation_slots
+        self.reset()
+
+    def reset(self) -> None:
+        self._r = 0
+        self._ptr: Dict[str, int] = {}
+        self.pools: Dict[str, List[Tuple[int, int]]] = {}
+
+    def _grow_pool(self, obs: SlotObs, task: Task) -> bool:
+        """Add the next server (region round-robin) to the model's pool."""
+        r = obs.cluster.n_regions
+        pool = self.pools.setdefault(task.model, [])
+        taken = set(pool)
+        for _ in range(r):
+            ridx = self._r % r
+            self._r += 1
+            reg = obs.cluster.regions[ridx]
+            for sidx, s in enumerate(reg.servers):
+                if s.state != "active" or s.mem_gb < task.mem_gb:
+                    continue
+                if (ridx, sidx) in taken:
+                    continue
+                pool.append((ridx, sidx))
+                return True
+        return False
+
+    def schedule(self, obs: SlotObs, tasks: List[Task]) -> SlotDecision:
+        assignments = {}
+        sat = self.saturation_slots * obs.slot_seconds
+        proj: Dict[Tuple[int, int], float] = {}
+        for task in tasks:
+            pool = self.pools.setdefault(task.model, [])
+            if not pool:
+                self._grow_pool(obs, task)
+            placed = False
+            for attempt in range(2):
+                n = len(pool)
+                for k in range(n):
+                    p = self._ptr.get(task.model, 0)
+                    self._ptr[task.model] = p + 1
+                    ridx, sidx = pool[p % n]
+                    reg = obs.cluster.regions[ridx]
+                    if sidx >= len(reg.servers):
+                        continue
+                    srv = reg.servers[sidx]
+                    if srv.state != "active" or srv.mem_gb < task.mem_gb:
+                        continue
+                    load = srv.queue_s + proj.get((ridx, sidx), 0.0)
+                    if load > sat:
+                        continue
+                    assignments[task.id] = (ridx, sidx)
+                    proj[(ridx, sidx)] = proj.get((ridx, sidx), 0.0) \
+                        + task.work_s / max(srv.tflops / 112.0, 0.1)
+                    placed = True
+                    break
+                if placed or not self._grow_pool(obs, task):
+                    break
+            if not placed:
+                assignments[task.id] = None
+        return SlotDecision(assignments=assignments)

@@ -1,0 +1,110 @@
+"""SkyLB baseline [45]: locality-aware cross-region load balancer.
+
+Per-region local balancers prefer local processing; on saturation, spill to
+the least-loaded remote region.  A prefix-tree-style affinity map pins
+repeat (origin, model) pairs to fixed replicas to exploit cache locality —
+adapted from SkyLB's session affinity to our model-serving setting."""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.sim.engine import SlotDecision, SlotObs
+from repro.sim.workload import Task
+
+
+class SkyLBScheduler:
+    name = "SkyLB"
+
+    def __init__(self, spill_threshold: float = 0.85):
+        self.spill_threshold = spill_threshold
+        self.reset()
+
+    def reset(self) -> None:
+        # (origin, model) -> replica set (grown on saturation, like the
+        # prefix-tree fan-out in SkyLB)
+        self.affinity: Dict[Tuple[int, str], list] = {}
+
+    def _server_load(self, srv, obs) -> float:
+        return srv.queue_s / obs.slot_seconds
+
+    def _pick_server(self, obs: SlotObs, ridx: int, task: Task,
+                     proj=None) -> Optional[int]:
+        reg = obs.cluster.regions[ridx]
+        best, best_load = None, float("inf")
+        for i, s in enumerate(reg.servers):
+            if s.state != "active" or s.mem_gb < task.mem_gb:
+                continue
+            load = self._server_load(s, obs)
+            if proj:
+                load += proj.get((ridx, i), 0.0) / obs.slot_seconds
+            # prefer warm replicas (prefix-tree cache affinity): a cache hit
+            # is worth the whole switch pipeline (~0.5 slot)
+            if s.current_model == task.model:
+                load -= 2.0
+            elif task.model in s.warm_models:
+                load -= 0.8
+            if load < best_load:
+                best, best_load = i, load
+        return best
+
+    def _region_saturated(self, obs: SlotObs, ridx: int) -> bool:
+        reg = obs.cluster.regions[ridx]
+        act = reg.active_servers()
+        if not act:
+            return True
+        mean_load = np.mean([s.queue_s for s in act]) / obs.slot_seconds
+        return mean_load > self.spill_threshold * 4.0
+
+    def schedule(self, obs: SlotObs, tasks: List[Task]) -> SlotDecision:
+        assignments = {}
+        r = obs.cluster.n_regions
+        proj: Dict[Tuple[int, int], float] = {}
+
+        def replica_load(ridx, sidx):
+            srv = obs.cluster.regions[ridx].servers[sidx]
+            return srv.queue_s + proj.get((ridx, sidx), 0.0)
+
+        for task in tasks:
+            key = (task.origin, task.model)
+            # sticky replica set first — least-loaded healthy replica
+            reps = self.affinity.setdefault(key, [])
+            live = [(ri, si) for ri, si in reps
+                    if si < len(obs.cluster.regions[ri].servers)
+                    and obs.cluster.regions[ri].servers[si].state == "active"]
+            live.sort(key=lambda rs: replica_load(*rs))
+            if live and replica_load(*live[0]) < 2.0 * obs.slot_seconds:
+                ridx, sidx = live[0]
+                assignments[task.id] = (ridx, sidx)
+                srv = obs.cluster.regions[ridx].servers[sidx]
+                proj[(ridx, sidx)] = proj.get((ridx, sidx), 0.0) \
+                    + task.work_s / max(srv.tflops / 112.0, 0.1)
+                continue
+            # grow replica set: local-first, then by latency
+            order = [task.origin] + sorted(
+                (j for j in range(r) if j != task.origin),
+                key=lambda j: obs.latency[task.origin, j])
+            placed = False
+            for ridx in order:
+                if self._region_saturated(obs, ridx):
+                    continue
+                sidx = self._pick_server(obs, ridx, task, proj)
+                if sidx is None:
+                    continue
+                assignments[task.id] = (ridx, sidx)
+                if (ridx, sidx) not in reps:
+                    reps.append((ridx, sidx))
+                    del reps[8:]
+                srv = obs.cluster.regions[ridx].servers[sidx]
+                proj[(ridx, sidx)] = proj.get((ridx, sidx), 0.0) \
+                    + task.work_s / max(srv.tflops / 112.0, 0.1)
+                placed = True
+                break
+            if not placed:
+                # forced spill: least-loaded region overall
+                loads = obs.queue_s / np.maximum(obs.capacities, 1e-9)
+                ridx = int(np.argmin(loads))
+                sidx = self._pick_server(obs, ridx, task)
+                assignments[task.id] = (ridx, sidx) if sidx is not None else None
+        return SlotDecision(assignments=assignments)

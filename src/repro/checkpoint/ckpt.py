@@ -1,0 +1,91 @@
+"""Msgpack checkpointing for arbitrary pytrees (params, optimizer state,
+scheduler state).  Arrays are stored as (dtype, shape, raw bytes); the tree
+structure is preserved via flatten-with-paths, so save/load round-trips any
+nested dict/list/namedtuple of arrays + scalars."""
+from __future__ import annotations
+
+import os
+import pathlib
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+Tree = Any
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _encode_leaf(x):
+    if isinstance(x, (jnp.ndarray, np.ndarray)) or hasattr(x, "dtype"):
+        arr = np.asarray(x)
+        return {b"__arr__": True, b"dtype": arr.dtype.name,
+                b"shape": list(arr.shape), b"data": arr.tobytes()}
+    return x
+
+
+def _decode_leaf(x):
+    if isinstance(x, dict) and (b"__arr__" in x or "__arr__" in x):
+        g = lambda k: x.get(k.encode(), x.get(k))
+        dt = g("dtype")
+        if isinstance(dt, bytes):
+            dt = dt.decode()
+        arr = np.frombuffer(g("data"), dtype=_np_dtype(dt))
+        return arr.reshape(g("shape")).copy()
+    return x
+
+
+def save_checkpoint(path: str, step: int, tree: Tree) -> str:
+    """Writes <path>/ckpt_<step>.msgpack atomically; returns the filename."""
+    d = pathlib.Path(path)
+    d.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {
+        b"step": step,
+        b"treedef": str(treedef),
+        b"leaves": [_encode_leaf(l) for l in leaves],
+    }
+    fn = d / f"ckpt_{step:08d}.msgpack"
+    tmp = fn.with_suffix(".tmp")
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, fn)
+    return str(fn)
+
+
+def latest_step(path: str) -> Optional[int]:
+    d = pathlib.Path(path)
+    if not d.exists():
+        return None
+    steps = [int(m.group(1)) for p in d.iterdir()
+             if (m := re.match(r"ckpt_(\d+)\.msgpack$", p.name))]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(path: str, template: Tree, step: Optional[int] = None
+                    ) -> Tuple[int, Tree]:
+    """Restores into the structure of ``template`` (values replaced)."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+    fn = pathlib.Path(path) / f"ckpt_{step:08d}.msgpack"
+    with open(fn, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=True)
+    leaves = [_decode_leaf(l) for l in payload[b"leaves"]]
+    _, treedef = jax.tree.flatten(template)
+    tree = jax.tree.unflatten(treedef, leaves)
+    # cast to template dtypes (bf16 params etc.)
+    tree = jax.tree.map(
+        lambda t, x: jnp.asarray(x, t.dtype) if hasattr(t, "dtype") else x,
+        template, tree)
+    return int(payload[b"step"]), tree

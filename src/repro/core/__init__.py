@@ -1,0 +1,3 @@
+"""TORTA core: the paper's contribution (OT + RL macro layer, micro layer)."""
+from repro.core.ot import (cost_matrix, exact_ot, normalize_masses, ot_cost,
+                           routing_probs, sinkhorn)

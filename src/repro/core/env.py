@@ -1,0 +1,149 @@
+"""Jittable macro-level environment for PPO training (§V-B2 MDP).
+
+State s_t = (U_t, Q_t, L, H_t, F_t, A_{t-1}) exactly as the paper defines;
+dynamics evolve region-level queues under the allocation action:
+
+    flows_ij = arrivals_i * A_ij
+    Q'_j     = Q_j + sum_i flows_ij - served_j,  served = min(Q+in, cap)
+
+Reward (Eq 3): r_OT + l1 * r_smooth + l2 * r_cost, with P*_t precomputed by
+batched Sinkhorn over the training traffic.  The demand feature F_t is the
+true next-slot arrival distribution corrupted to a target prediction
+accuracy (Eq 12) — enabling the Fig-12 sensitivity sweep.
+
+Trained policies are *evaluated* in the full discrete-event simulator
+(repro/sim) — this env is the offline-training surrogate (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ot import (cost_matrix, normalize_masses, routing_probs,
+                           sinkhorn)
+
+K_HIST = 5
+
+
+class EnvParams(NamedTuple):
+    capacity: jax.Array       # (R,) tasks per slot
+    power_cost: jax.Array     # (R,) $ per served task
+    latency: jax.Array        # (R, R) ms
+    traffic: jax.Array        # (T, R) arrivals per slot
+    ot_probs: jax.Array       # (T, R, R) Sinkhorn routing probs per slot
+    q_max: jax.Array          # scalar
+    lambda1: jax.Array        # smoothness weight (Eq 3)
+    lambda2: jax.Array        # cost weight (Eq 3)
+    pred_noise: jax.Array     # 0 = oracle forecast, 1 = uninformative
+    w_net: jax.Array          # power-cost network weight
+    horizon: int              # static
+
+
+class EnvState(NamedTuple):
+    q: jax.Array              # (R,)
+    u: jax.Array              # (R,)
+    a_prev: jax.Array         # (R, R)
+    hist: jax.Array           # (K, R) recent arrival distributions
+    t: jax.Array              # scalar int32
+    rng: jax.Array
+
+
+def make_env_params(capacity: np.ndarray, power_cost: np.ndarray,
+                    latency: np.ndarray, traffic: np.ndarray, *,
+                    lambda1: float = 0.5, lambda2: float = 0.5,
+                    pred_noise: float = 0.0, w_net: float = 0.01,
+                    reg: float = 0.05) -> EnvParams:
+    r = capacity.shape[0]
+    t_total = traffic.shape[0]
+    cost = cost_matrix(jnp.asarray(power_cost), jnp.asarray(latency))
+    mu, nu = normalize_masses(jnp.asarray(traffic),
+                              jnp.broadcast_to(jnp.asarray(capacity),
+                                               traffic.shape))
+    plans = sinkhorn(mu, nu, jnp.broadcast_to(cost, (t_total, r, r)), reg=reg)
+    probs = routing_probs(plans)
+    return EnvParams(
+        capacity=jnp.asarray(capacity, jnp.float32),
+        power_cost=jnp.asarray(power_cost, jnp.float32),
+        latency=jnp.asarray(latency, jnp.float32),
+        traffic=jnp.asarray(traffic, jnp.float32),
+        ot_probs=probs.astype(jnp.float32),
+        q_max=jnp.asarray(10.0 * float(capacity.sum()), jnp.float32),
+        lambda1=jnp.asarray(lambda1, jnp.float32),
+        lambda2=jnp.asarray(lambda2, jnp.float32),
+        pred_noise=jnp.asarray(pred_noise, jnp.float32),
+        w_net=jnp.asarray(w_net, jnp.float32),
+        horizon=int(t_total),
+    )
+
+
+def env_reset(params: EnvParams, rng: jax.Array) -> EnvState:
+    r = params.capacity.shape[0]
+    return EnvState(
+        q=jnp.zeros((r,), jnp.float32),
+        u=jnp.zeros((r,), jnp.float32),
+        a_prev=jnp.full((r, r), 1.0 / r, jnp.float32),
+        hist=jnp.full((K_HIST, r), 1.0 / r, jnp.float32),
+        t=jnp.zeros((), jnp.int32),
+        rng=rng,
+    )
+
+
+def obs_dim(n_regions: int) -> int:
+    r = n_regions
+    return r + r + r * r + K_HIST * r + r + r * r
+
+
+def env_obs(params: EnvParams, state: EnvState) -> jax.Array:
+    r = params.capacity.shape[0]
+    nxt = params.traffic[jnp.minimum(state.t + 1, params.horizon - 1)]
+    f_true = nxt / jnp.maximum(nxt.sum(), 1e-9)
+    key = jax.random.fold_in(state.rng, state.t)
+    noise = jax.random.dirichlet(key, jnp.ones((r,)))
+    f = (1 - params.pred_noise) * f_true + params.pred_noise * noise
+    lat = params.latency / jnp.maximum(params.latency.max(), 1e-9)
+    return jnp.concatenate([
+        state.u,
+        state.q / params.q_max,
+        lat.reshape(-1),
+        state.hist.reshape(-1),
+        f,
+        state.a_prev.reshape(-1),
+    ])
+
+
+def env_step(params: EnvParams, state: EnvState, action: jax.Array
+             ) -> Tuple[EnvState, jax.Array, Dict[str, jax.Array]]:
+    arrivals = params.traffic[state.t]                   # (R,)
+    flows = arrivals[:, None] * action                   # i -> j
+    incoming = flows.sum(0)
+    q_tot = state.q + incoming
+    served = jnp.minimum(q_tot, params.capacity)
+    q_new = q_tot - served
+    util = served / jnp.maximum(params.capacity, 1e-9)
+
+    p_star = params.ot_probs[state.t]
+    r_ot = -jnp.sum(jnp.square(action - p_star))
+    r_smooth = -jnp.sum(jnp.square(action - state.a_prev))
+    r_cost = -jnp.sum(q_new) / params.q_max
+    reward = r_ot + params.lambda1 * r_smooth + params.lambda2 * r_cost
+
+    power = jnp.sum(served * params.power_cost) + \
+        params.w_net * jnp.sum(flows * params.latency)
+    arr_dist = arrivals / jnp.maximum(arrivals.sum(), 1e-9)
+    hist = jnp.concatenate([state.hist[1:], arr_dist[None]], axis=0)
+    new_state = EnvState(q=q_new, u=util, a_prev=action, hist=hist,
+                         t=state.t + 1, rng=state.rng)
+    info = {
+        "p_star": p_star,
+        "queue": jnp.sum(q_new),
+        "power": power,
+        "switch": jnp.sum(jnp.square(action - state.a_prev)),
+        "ot_dev": jnp.sqrt(jnp.sum(jnp.square(action - p_star))),
+        "util_cv": jnp.std(util) / jnp.maximum(jnp.mean(util), 1e-9),
+        "dropped": jnp.maximum(jnp.sum(q_new) - params.q_max, 0.0),
+        "r_ot": r_ot, "r_smooth": r_smooth, "r_cost": r_cost,
+    }
+    return new_state, reward, info

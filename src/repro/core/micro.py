@@ -1,0 +1,159 @@
+"""Micro-level allocation (§V-C): dynamic server activation (Eq 6) + greedy
+task-server matching by compatibility score (Eqs 7-10) + task buffering.
+
+The scoring hot path is vectorized as an (N tasks x S servers) score matrix
+— the same computation implemented as the ``compat_score`` Pallas kernel for
+TPU (this numpy path is its oracle at simulator scale).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.sim.cluster import Region, Server
+from repro.sim.engine import SlotObs
+from repro.sim.workload import Task
+
+W_HW, W_LOAD, W_LOC = 0.4, 0.4, 0.2      # Eq 7 weights
+W_WARM = 2.0                             # same-model (no-switch) bonus
+W_MODEL, W_EMBED = 0.7, 0.3              # Eq 10 similarity weights
+LOC_DECAY = 0.5                          # lambda in Eq 10
+
+
+def target_active_servers(queue_tasks: float, predicted: float,
+                          avg_capacity: float, n_servers: int, *,
+                          sigma: float = 1.0, headroom: float = 2.0) -> int:
+    """Eq 6: N_target = min(S_r, ceil((Q + F + sigma*sqrt(F)) / C_avg)).
+
+    ``headroom`` scales the target to keep utilization off the knee of the
+    queueing curve (the paper trades a mild power increase for latency —
+    its cost win comes from cheap-region routing + fewer switches, not from
+    starving capacity)."""
+    f = max(predicted, 0.0)
+    need = (queue_tasks + f + sigma * math.sqrt(f)) / max(avg_capacity, 1e-9)
+    return int(min(n_servers, max(1, math.ceil(headroom * need))))
+
+
+def hw_compatibility(task: Task, srv: Server) -> float:
+    """Eq 8: min(1, compute ratio) * min(1, memory ratio) * type match."""
+    # compute requirement proxy: task kind maps to a tflops demand
+    demand = {"compute": 200.0, "memory": 100.0, "lightweight": 60.0}[task.kind]
+    c = min(1.0, srv.tflops / demand)
+    m = min(1.0, srv.mem_gb / max(task.mem_gb, 1e-9))
+    type_match = 1.0 if srv.kind == task.kind else 0.5
+    return c * m * type_match
+
+
+def load_compatibility(srv: Server, slot_s: float) -> float:
+    """Eq 9: exp(-(util + queue)/capacity), with the queue expressed as
+    slot-time occupancy so slow/small GPUs aren't permanently discriminated
+    (they must fill with lightweight tasks for the fleet to balance)."""
+    q_norm = srv.queue_s / max(slot_s, 1e-9)
+    return math.exp(-(srv.util + q_norm))
+
+
+@dataclasses.dataclass
+class RecentTask:
+    model: str
+    embed: Optional[np.ndarray]
+    slot: int
+
+
+class LocalityTracker:
+    """Recent-task history per server for Eq 10."""
+
+    def __init__(self, keep: int = 4):
+        self.keep = keep
+        self.recent: Dict[Tuple[int, int], List[RecentTask]] = {}
+
+    def note(self, key: Tuple[int, int], task: Task, t: int) -> None:
+        lst = self.recent.setdefault(key, [])
+        lst.insert(0, RecentTask(task.model, task.embed, t))
+        del lst[self.keep:]
+
+    def locality(self, key: Tuple[int, int], task: Task, t: int) -> float:
+        total = 0.0
+        for rt in self.recent.get(key, ()):
+            sim = W_MODEL * (1.0 if rt.model == task.model else 0.0)
+            if task.embed is not None and rt.embed is not None:
+                denom = (np.linalg.norm(task.embed) * np.linalg.norm(rt.embed))
+                if denom > 1e-9:
+                    sim += W_EMBED * float(task.embed @ rt.embed) / denom
+            total += sim / math.exp(LOC_DECAY * min(max(t - rt.slot, 0), 40))
+        return total
+
+
+def score(task: Task, srv: Server, key: Tuple[int, int], t: int,
+          slot_s: float, loc: LocalityTracker) -> float:
+    """Eq 7 (+ explicit warm-model bonus: a same-model hit skips the entire
+    Fig-3 switch pipeline, the single largest latency term)."""
+    warm = 1.0 if srv.current_model == task.model else (
+        0.4 if task.model in srv.warm_models else 0.0)
+    return (W_HW * hw_compatibility(task, srv)
+            + W_LOAD * load_compatibility(srv, slot_s)
+            + W_LOC * loc.locality(key, task, t)
+            + W_WARM * warm)
+
+
+class MicroAllocator:
+    """Greedy matching within a region, urgency-first (Algorithm 1, Phase 2)."""
+
+    def __init__(self, sigma: float = 1.0, headroom: float = 2.0):
+        self.sigma = sigma
+        self.headroom = headroom
+        self.loc = LocalityTracker()
+
+    def reset(self) -> None:
+        self.loc = LocalityTracker()
+
+    def activation_target(self, obs: SlotObs, ridx: int,
+                          predicted: float) -> int:
+        reg = obs.cluster.regions[ridx]
+        caps = [s.capacity for s in reg.servers]
+        avg_cap = float(np.mean(caps)) if caps else 1.0
+        return target_active_servers(
+            float(obs.queue_tasks[ridx]), predicted, avg_cap,
+            len(reg.servers), sigma=self.sigma, headroom=self.headroom)
+
+    def assign_region(self, obs: SlotObs, ridx: int, tasks: List[Task]
+                      ) -> Dict[int, Optional[Tuple[int, int]]]:
+        reg = obs.cluster.regions[ridx]
+        active = [(i, s) for i, s in enumerate(reg.servers)
+                  if s.state == "active"]
+        out: Dict[int, Optional[Tuple[int, int]]] = {}
+        if not active:
+            return {t.id: None for t in tasks}
+        # urgency (deadline) first, then resource-intensive first
+        ordered = sorted(tasks, key=lambda tk: (tk.deadline_slot, tk.model, -tk.work_s))
+        proj = {i: s.queue_s for i, s in active}
+        for task in ordered:
+            best, best_sc = None, -float("inf")
+            for i, s in active:
+                if s.mem_gb < task.mem_gb:
+                    continue
+                if proj[i] > 16.0 * obs.slot_seconds:   # capacity guard
+                    continue
+                sc = score(task, s, (ridx, i), obs.t, obs.slot_seconds,
+                           self.loc)
+                # projected wait penalty — superlinear so warm-model
+                # stickiness can never hold a backlogged server (a switch
+                # costs ~0.5 slot; waiting >1.5 slots must dominate it)
+                q_slots = proj[i] / obs.slot_seconds
+                sc -= 0.8 * q_slots + 0.4 * q_slots * q_slots
+                # execution-time term: route heavy tasks to fast silicon
+                speed_i = max(s.tflops / 112.0, 0.1)
+                sc -= 0.3 * (task.work_s / speed_i) / obs.slot_seconds
+                if sc > best_sc:
+                    best, best_sc = i, sc
+            if best is None:
+                out[task.id] = None            # buffer (§V-C2 buffering)
+                continue
+            srv = reg.servers[best]
+            speed = max(srv.tflops / 112.0, 0.1)
+            proj[best] += task.work_s / speed + srv.switch_cost_s(task.model)
+            self.loc.note((ridx, best), task, obs.t)
+            out[task.id] = (ridx, best)
+        return out

@@ -1,0 +1,97 @@
+"""Optimal transport for macro-level regional load balancing (§V-B1).
+
+- :func:`sinkhorn` — entropic-regularized OT, fully jittable and batched;
+  this is the hot path during PPO training (one plan per env per slot), and
+  the Pallas kernel ``repro/kernels/sinkhorn`` implements the same iteration
+  for TPU (this jnp version is its oracle).
+- :func:`exact_ot` — LP solution via scipy (HiGHS) used in tests and for the
+  reactive-OT baseline's "upper bound" plan (Thm 1).
+- :func:`routing_probs` — row-normalization of the plan into per-source
+  routing distributions (Eq after (2) in the paper).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def normalize_masses(req: jax.Array, cap: jax.Array,
+                     eps: float = 1e-9) -> Tuple[jax.Array, jax.Array]:
+    """Normalize raw request counts / capacities to unit mass (paper §V-B1)."""
+    mu = req / jnp.maximum(req.sum(-1, keepdims=True), eps)
+    nu = cap / jnp.maximum(cap.sum(-1, keepdims=True), eps)
+    return mu, nu
+
+
+def cost_matrix(power_cost: jax.Array, latency: jax.Array,
+                bandwidth_cost: Optional[jax.Array] = None,
+                w1: float = 1.0, w2: float = 0.01) -> jax.Array:
+    """C_ij = w1 * PowerCost_j + w2 * (L_ij + BandwidthCost_ij); w1 >> w2."""
+    r = latency.shape[-1]
+    c = w1 * jnp.broadcast_to(power_cost[..., None, :], latency.shape)
+    bw = bandwidth_cost if bandwidth_cost is not None else 0.0
+    return c + w2 * (latency + bw)
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters",))
+def sinkhorn(mu: jax.Array, nu: jax.Array, cost: jax.Array, *,
+             reg: float = 0.05, n_iters: int = 100) -> jax.Array:
+    """Entropic OT plan.  Shapes: mu (..., R), nu (..., R), cost (..., R, R).
+
+    Log-domain Sinkhorn for stability at small reg.  Returns plan with
+    marginals (mu, nu)."""
+    logmu = jnp.log(jnp.maximum(mu, 1e-30))
+    lognu = jnp.log(jnp.maximum(nu, 1e-30))
+    mk = -cost / reg                                    # (..., R, R)
+
+    def body(_, fg):
+        f, g = fg
+        f = reg * (logmu - jax.nn.logsumexp(
+            (mk * reg + g[..., None, :]) / reg, axis=-1))
+        g = reg * (lognu - jax.nn.logsumexp(
+            (mk * reg + f[..., None]) / reg, axis=-2))
+        return (f, g)
+
+    f0 = jnp.zeros_like(mu)
+    g0 = jnp.zeros_like(nu)
+    f, g = jax.lax.fori_loop(0, n_iters, body, (f0, g0))
+    log_plan = (mk * reg + f[..., None] + g[..., None, :]) / reg
+    return jnp.exp(log_plan)
+
+
+def ot_cost(plan: jax.Array, cost: jax.Array) -> jax.Array:
+    return jnp.sum(plan * cost, axis=(-2, -1))
+
+
+def routing_probs(plan: jax.Array, eps: float = 1e-12) -> jax.Array:
+    """Row-normalize plan into routing probabilities Prob_{i->j}."""
+    return plan / jnp.maximum(plan.sum(-1, keepdims=True), eps)
+
+
+def exact_ot(mu: np.ndarray, nu: np.ndarray, cost: np.ndarray) -> np.ndarray:
+    """Exact LP transport plan (scipy HiGHS).  Single problem, not jittable;
+    used as the Sinkhorn oracle in tests and for Thm-1 baselines."""
+    from scipy.optimize import linprog
+    r = mu.shape[0]
+    c = cost.reshape(-1)
+    a_eq = []
+    b_eq = []
+    for i in range(r):                                  # row marginals
+        row = np.zeros((r, r))
+        row[i, :] = 1
+        a_eq.append(row.reshape(-1))
+        b_eq.append(mu[i])
+    for j in range(r):                                  # col marginals
+        col = np.zeros((r, r))
+        col[:, j] = 1
+        a_eq.append(col.reshape(-1))
+        b_eq.append(nu[j])
+    res = linprog(c, A_eq=np.array(a_eq), b_eq=np.array(b_eq),
+                  bounds=(0, None), method="highs")
+    if not res.success:  # pragma: no cover
+        raise RuntimeError(f"exact OT failed: {res.message}")
+    return res.x.reshape(r, r)

@@ -1,0 +1,85 @@
+"""PPO policy/value networks (Appendix B architecture).
+
+Policy: MLP (256, 512, 256) + ReLU; outputs Beta(alpha, beta) parameters for
+every element of the R x R allocation matrix (softplus + 1 so alpha,beta > 1
+— unimodal Betas).  Sampled raw matrices are row-normalized into allocation
+actions; log-probs/entropy are computed on the raw Beta samples.
+Value: same trunk -> scalar.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import betaln, digamma
+
+Tree = Any
+HIDDEN = (256, 512, 256)
+
+
+def _mlp_init(rng, dims):
+    keys = jax.random.split(rng, len(dims) - 1)
+    return [{"w": jax.random.normal(k, (i, o)) * (2.0 / i) ** 0.5,
+             "b": jnp.zeros((o,))}
+            for k, (i, o) in zip(keys, zip(dims[:-1], dims[1:]))]
+
+
+def _mlp(params, x):
+    for layer in params[:-1]:
+        x = jax.nn.relu(x @ layer["w"] + layer["b"])
+    return x @ params[-1]["w"] + params[-1]["b"]
+
+
+def init_policy(rng: jax.Array, obs_dim: int, n_regions: int) -> Tree:
+    kp, kv = jax.random.split(rng)
+    out = 2 * n_regions * n_regions
+    pol = _mlp_init(kp, [obs_dim, *HIDDEN, out])
+    # small final layer -> near-uniform Beta(~1.5, ~1.5) at init
+    pol[-1]["w"] = pol[-1]["w"] * 0.01
+    val = _mlp_init(kv, [obs_dim, *HIDDEN, 1])
+    return {"policy": pol, "value": val}
+
+
+def beta_params(params: Tree, obs: jax.Array, n_regions: int
+                ) -> Tuple[jax.Array, jax.Array]:
+    out = _mlp(params["policy"], obs)
+    a, b = jnp.split(out, 2, axis=-1)
+    shape = (*obs.shape[:-1], n_regions, n_regions)
+    alpha = (jax.nn.softplus(a) + 1.0).reshape(shape)
+    beta = (jax.nn.softplus(b) + 1.0).reshape(shape)
+    return alpha, beta
+
+
+def value(params: Tree, obs: jax.Array) -> jax.Array:
+    return _mlp(params["value"], obs)[..., 0]
+
+
+def sample_action(params: Tree, obs: jax.Array, rng: jax.Array,
+                  n_regions: int) -> Dict[str, jax.Array]:
+    alpha, beta = beta_params(params, obs, n_regions)
+    raw = jax.random.beta(rng, alpha, beta)
+    raw = jnp.clip(raw, 1e-4, 1 - 1e-4)
+    act = raw / raw.sum(-1, keepdims=True)
+    return {"raw": raw, "action": act,
+            "log_prob": beta_log_prob(alpha, beta, raw).sum((-2, -1)),
+            "value": value(params, obs)}
+
+
+def mean_action(params: Tree, obs: jax.Array, n_regions: int) -> jax.Array:
+    alpha, beta = beta_params(params, obs, n_regions)
+    m = alpha / (alpha + beta)
+    return m / m.sum(-1, keepdims=True)
+
+
+def beta_log_prob(alpha, beta, x):
+    x = jnp.clip(x, 1e-6, 1 - 1e-6)
+    return ((alpha - 1) * jnp.log(x) + (beta - 1) * jnp.log1p(-x)
+            - betaln(alpha, beta))
+
+
+def beta_entropy(alpha, beta):
+    return (betaln(alpha, beta)
+            - (alpha - 1) * digamma(alpha)
+            - (beta - 1) * digamma(beta)
+            + (alpha + beta - 2) * digamma(alpha + beta))

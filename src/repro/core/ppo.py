@@ -1,0 +1,242 @@
+"""PPO with OT supervision and the paper's constrained training objective.
+
+    L_total = L_PPO + gamma * L_eps + delta * L_s          (Eq 5)
+
+    L_eps = max(0, (||A_RL - A_OT||_F - eps_max) / eps0)   — OT deviation
+    L_s   = max(0, (s_min - s_current) / s0)               — switching gain
+
+gamma/delta are adapted between iterations per Appendix B:
+    gamma = gamma0 * exp(a_g * max(0, ||B||_F - eps_target))
+    delta = delta0 * exp(a_d * max(0, s_target - s_current))
+
+The trainer validates the Thm-3 advantage condition
+    (1 - 1/s) / eps > (L_R + beta * L_P) / (alpha * K0)
+every iteration (constants estimated by repro/core/theory.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import policy as pol
+from repro.core.env import (EnvParams, EnvState, env_obs, env_reset, env_step,
+                            obs_dim)
+from repro.optim.adam import Adam, apply_updates
+
+Tree = Any
+
+
+class Rollout(NamedTuple):
+    obs: jax.Array        # (E, T, obs)
+    p_star: jax.Array     # (E, T, R, R) OT supervision targets
+    raw: jax.Array        # (E, T, R, R) raw beta samples
+    actions: jax.Array    # (E, T, R, R)
+    log_probs: jax.Array  # (E, T)
+    values: jax.Array     # (E, T)
+    rewards: jax.Array    # (E, T)
+    ot_dev: jax.Array     # (E, T) ||A - P*||_F
+    switch: jax.Array     # (E, T) ||A_t - A_{t-1}||_F^2
+    adv: jax.Array        # (E, T)
+    returns: jax.Array    # (E, T)
+
+
+@functools.partial(jax.jit, static_argnames=("n_envs", "n_steps", "n_regions",
+                                             "gamma", "lam"))
+def collect_rollout(params: Tree, env_params: EnvParams, rng: jax.Array,
+                    n_envs: int, n_steps: int, n_regions: int,
+                    gamma: float = 0.99, lam: float = 0.95) -> Rollout:
+    keys = jax.random.split(rng, n_envs)
+    states = jax.vmap(lambda k: env_reset(env_params, k))(keys)
+
+    def step(carry, t):
+        states, rng = carry
+        rng, k = jax.random.split(rng)
+        obs = jax.vmap(lambda s: env_obs(env_params, s))(states)
+        ks = jax.random.split(k, n_envs)
+        out = jax.vmap(lambda o, kk: pol.sample_action(params, o, kk, n_regions)
+                       )(obs, ks)
+        new_states, rewards, infos = jax.vmap(
+            lambda s, a: env_step(env_params, s, a))(states, out["action"])
+        rec = (obs, infos["p_star"], out["raw"], out["action"],
+               out["log_prob"], out["value"], rewards, infos["ot_dev"],
+               infos["switch"])
+        return (new_states, rng), rec
+
+    (_, _), recs = jax.lax.scan(step, (states, rng), jnp.arange(n_steps))
+    (obs, p_star, raw, actions, log_probs, values, rewards, ot_dev,
+     switch) = [jnp.moveaxis(r, 0, 1) for r in recs]     # (E, T, ...)
+
+    # GAE
+    def gae_body(carry, xs):
+        adv_next, v_next = carry
+        r, v = xs
+        delta = r + gamma * v_next - v
+        adv = delta + gamma * lam * adv_next
+        return (adv, v), adv
+
+    def per_env(rs, vs):
+        (_, _), advs = jax.lax.scan(gae_body,
+                                    (jnp.zeros(()), jnp.zeros(())),
+                                    (rs, vs), reverse=True)
+        return advs
+
+    adv = jax.vmap(per_env)(rewards, values)
+    returns = adv + values
+    adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+    return Rollout(obs, p_star, raw, actions, log_probs, values, rewards,
+                   ot_dev, switch, adv, returns)
+
+
+def ppo_loss(params: Tree, batch: Dict[str, jax.Array], n_regions: int, *,
+             clip_eps: float = 0.2, vf_coef: float = 0.5,
+             ent_coef: float = 1e-3, gamma_c: float = 0.0,
+             delta_c: float = 0.0, eps_max: float = 0.15, eps0: float = 0.05,
+             s_min: float = 2.5, s0: float = 0.5, k0: float = 1.0,
+             sup_coef: float = 2.0
+             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    alpha, beta = pol.beta_params(params, batch["obs"], n_regions)
+    lp = pol.beta_log_prob(alpha, beta, batch["raw"]).sum((-2, -1))
+    ratio = jnp.exp(lp - batch["log_probs"])
+    adv = batch["adv"]
+    surr = jnp.minimum(ratio * adv,
+                       jnp.clip(ratio, 1 - clip_eps, 1 + clip_eps) * adv)
+    policy_loss = -surr.mean()
+    v = pol.value(params, batch["obs"])
+    value_loss = jnp.mean(jnp.square(v - batch["returns"]))
+    entropy = pol.beta_entropy(alpha, beta).sum((-2, -1)).mean()
+
+    # OT plans as supervised signals (paper abstract / §V-B2): pull the
+    # policy mean toward P*_t directly, on top of the r_OT reward channel
+    mean = alpha / (alpha + beta)
+    mean = mean / mean.sum(-1, keepdims=True)
+    sup = jnp.mean(jnp.sum(jnp.square(mean - batch["p_star"]), (-2, -1)))
+
+    # constraint terms (Eq 5 / Appendix A Definition 2)
+    l_eps = jnp.maximum(0.0, (batch["ot_dev"].mean() - eps_max) / eps0)
+    s_current = k0 / jnp.maximum(batch["switch"].mean(), 1e-6)
+    l_s = jnp.maximum(0.0, (s_min - s_current) / s0)
+
+    total = (policy_loss + vf_coef * value_loss - ent_coef * entropy
+             + sup_coef * sup + gamma_c * l_eps + delta_c * l_s)
+    metrics = {"policy_loss": policy_loss, "value_loss": value_loss,
+               "entropy": entropy, "l_eps": l_eps, "l_s": l_s, "sup": sup,
+               "s_current": s_current, "ratio": ratio.mean()}
+    return total, metrics
+
+
+@dataclasses.dataclass
+class PPOTrainer:
+    env_params: EnvParams
+    n_regions: int
+    n_envs: int = 16
+    n_steps: int = 64
+    lr: float = 3e-4
+    lr_decay: float = 0.995     # every 100 episodes (Appendix B)
+    epochs: int = 4
+    minibatches: int = 8
+    seed: int = 0
+    # constrained-objective targets (Algorithm 2 line 5)
+    eps_target: float = 0.15
+    s_target: float = 2.5
+    gamma0: float = 0.5
+    delta0: float = 0.5
+    k0: float = 1.0              # baseline switching cost (theory.estimate_k0)
+    alpha_weight: float = 1.0    # objective weights (Eq 1)
+    beta_weight: float = 1.0
+    lipschitz: Tuple[float, float] = (1.0, 1.0)   # (L_R, L_P)
+
+    def __post_init__(self):
+        rng = jax.random.PRNGKey(self.seed)
+        self.params = pol.init_policy(rng, obs_dim(self.n_regions),
+                                      self.n_regions)
+        self.opt = Adam(lr=self.lr, grad_clip=1.0)
+        self.opt_state = self.opt.init(self.params)
+        self.gamma_c = self.gamma0
+        self.delta_c = self.delta0
+        self._rng = jax.random.PRNGKey(self.seed + 1)
+        self._update = jax.jit(self._make_update(), static_argnames=())
+        self.history: List[Dict[str, float]] = []
+
+    def _make_update(self):
+        opt = self.opt
+        nr = self.n_regions
+
+        def update(params, opt_state, batch, gamma_c, delta_c):
+            def lf(p):
+                return ppo_loss(p, batch, nr, gamma_c=gamma_c,
+                                delta_c=delta_c, eps_max=self.eps_target,
+                                s_min=self.s_target, k0=self.k0)
+            (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            return apply_updates(params, updates), opt_state, loss, metrics
+
+        return update
+
+    def train(self, iterations: int = 20, verbose: bool = False
+              ) -> List[Dict[str, float]]:
+        e, t = self.n_envs, self.n_steps
+        for it in range(iterations):
+            self._rng, k = jax.random.split(self._rng)
+            ro = collect_rollout(self.params, self.env_params, k,
+                                 e, t, self.n_regions)
+            flat = {
+                "obs": ro.obs.reshape(e * t, -1),
+                "p_star": ro.p_star.reshape(e * t, self.n_regions,
+                                            self.n_regions),
+                "raw": ro.raw.reshape(e * t, self.n_regions, self.n_regions),
+                "log_probs": ro.log_probs.reshape(-1),
+                "adv": ro.adv.reshape(-1),
+                "returns": ro.returns.reshape(-1),
+                "ot_dev": ro.ot_dev.reshape(-1),
+                "switch": ro.switch.reshape(-1),
+            }
+            n = e * t
+            mb = n // self.minibatches
+            perm = np.random.default_rng(self.seed + it).permutation(n)
+            metrics = {}
+            for _ in range(self.epochs):
+                for i in range(self.minibatches):
+                    idx = perm[i * mb:(i + 1) * mb]
+                    batch = {k2: v[idx] for k2, v in flat.items()}
+                    self.params, self.opt_state, loss, metrics = self._update(
+                        self.params, self.opt_state, batch,
+                        self.gamma_c, self.delta_c)
+            # adaptive constraint weights (Appendix B)
+            b_norm = float(ro.ot_dev.mean())
+            s_cur = float(self.k0 / max(float(ro.switch.mean()), 1e-6))
+            self.gamma_c = float(self.gamma0 *
+                                 np.exp(2.0 * max(0.0, b_norm - self.eps_target)))
+            self.delta_c = float(self.delta0 *
+                                 np.exp(2.0 * max(0.0, self.s_target - s_cur)))
+            cond = self.advantage_condition(b_norm, s_cur)
+            if cond is not None and not cond:
+                self.gamma_c *= 1.5
+                self.delta_c *= 1.5
+            rec = {"iter": it, "reward": float(ro.rewards.mean()),
+                   "ot_dev": b_norm, "s_current": s_cur,
+                   "switch": float(ro.switch.mean()),
+                   "gamma_c": self.gamma_c, "delta_c": self.delta_c,
+                   "advantage_condition": bool(cond) if cond is not None else None,
+                   **{k2: float(v) for k2, v in metrics.items()}}
+            self.history.append(rec)
+            if verbose:
+                print(rec)
+        return self.history
+
+    def advantage_condition(self, eps: float, s: float) -> Optional[bool]:
+        """Thm 3: (1 - 1/s)/eps > (L_R + beta*L_P) / (alpha*K0)."""
+        if s <= 1 or eps <= 0:
+            return False
+        lr_, lp_ = self.lipschitz
+        lhs = (1 - 1 / s) / eps
+        rhs = (lr_ + self.beta_weight * lp_) / (self.alpha_weight * self.k0)
+        return lhs > rhs
+
+    def act(self, obs: np.ndarray) -> np.ndarray:
+        return np.asarray(pol.mean_action(self.params, jnp.asarray(obs),
+                                          self.n_regions))

@@ -1,0 +1,133 @@
+"""Demand predictor (Appendix B): MLP over K=5 slots of (U, Q, H) history.
+
+Input  : concat of the last K slots' per-region features -> (K * 3R,)
+Hidden : 512 -> 256, ReLU
+Output : R-dim softmax — the predicted *distribution* of next-slot arrivals.
+Training minimizes MSE against the realized normalized arrivals with L2
+regularization (lambda = 1e-4), exactly the Appendix-B objective.  Absolute
+volume is recovered by scaling with an EMA of recent totals (the paper's
+metric, Eq 12, is scale-normalized, so the distribution is what matters).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.adam import Adam, apply_updates
+
+Tree = Any
+K_HIST = 5
+
+
+def init_predictor(rng: jax.Array, n_regions: int,
+                   hidden=(512, 256)) -> Tree:
+    dims = [K_HIST * 3 * n_regions, *hidden, n_regions]
+    keys = jax.random.split(rng, len(dims) - 1)
+    params = []
+    for k, (i, o) in zip(keys, zip(dims[:-1], dims[1:])):
+        w = jax.random.normal(k, (i, o)) * (2.0 / i) ** 0.5
+        params.append({"w": w, "b": jnp.zeros((o,))})
+    return params
+
+
+def predict(params: Tree, hist: jax.Array) -> jax.Array:
+    """hist: (..., K, 3R) -> (..., R) softmax distribution."""
+    x = hist.reshape(*hist.shape[:-2], -1)
+    for layer in params[:-1]:
+        x = jax.nn.relu(x @ layer["w"] + layer["b"])
+    x = x @ params[-1]["w"] + params[-1]["b"]
+    return jax.nn.softmax(x, axis=-1)
+
+
+def loss_fn(params: Tree, hist: jax.Array, target: jax.Array,
+            l2: float = 1e-4) -> jax.Array:
+    pred = predict(params, hist)
+    mse = jnp.mean(jnp.sum(jnp.square(pred - target), axis=-1))
+    reg = sum(jnp.sum(jnp.square(l["w"])) for l in params)
+    return mse + l2 * reg
+
+
+@dataclasses.dataclass
+class PredictorTrainer:
+    n_regions: int
+    lr: float = 1e-3
+    seed: int = 0
+
+    def __post_init__(self):
+        self.params = init_predictor(jax.random.PRNGKey(self.seed),
+                                     self.n_regions)
+        self.opt = Adam(lr=self.lr)
+        self.opt_state = self.opt.init(self.params)
+        self._step = jax.jit(self._make_step())
+
+    def _make_step(self):
+        opt = self.opt
+
+        def step(params, opt_state, hist, target):
+            loss, grads = jax.value_and_grad(loss_fn)(params, hist, target)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            return apply_updates(params, updates), opt_state, loss
+
+        return step
+
+    def fit(self, hist: np.ndarray, target: np.ndarray, *, epochs: int = 50,
+            batch: int = 64) -> list:
+        """hist: (N, K, 3R); target: (N, R) normalized arrivals."""
+        n = hist.shape[0]
+        rng = np.random.default_rng(self.seed)
+        losses = []
+        for _ in range(epochs):
+            order = rng.permutation(n)
+            ep = 0.0
+            for i in range(0, n, batch):
+                idx = order[i:i + batch]
+                self.params, self.opt_state, l = self._step(
+                    self.params, self.opt_state,
+                    jnp.asarray(hist[idx]), jnp.asarray(target[idx]))
+                ep += float(l) * len(idx)
+            losses.append(ep / n)
+        return losses
+
+    def __call__(self, hist: np.ndarray) -> np.ndarray:
+        return np.asarray(predict(self.params, jnp.asarray(hist)))
+
+
+def make_dataset(arrivals: np.ndarray, util: np.ndarray, queue: np.ndarray
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """Build (hist, target) pairs from slot-level traces.
+
+    arrivals/util/queue: (T, R).  hist feature per slot = [U, Q, H] where H
+    is the normalized arrival distribution (the paper's 'historical load
+    pattern' channel)."""
+    t_total, r = arrivals.shape
+    h = arrivals / np.maximum(arrivals.sum(1, keepdims=True), 1e-9)
+    feats = np.concatenate([util, queue / np.maximum(queue.max(), 1.0), h],
+                           axis=1)                       # (T, 3R)
+    xs, ys = [], []
+    for t in range(K_HIST, t_total - 1):
+        xs.append(feats[t - K_HIST:t])
+        ys.append(h[t + 1])
+    return np.asarray(xs, np.float32), np.asarray(ys, np.float32)
+
+
+class EmaPredictor:
+    """Fallback predictor (no learned weights): exponential moving average of
+    recent arrival distributions — used when TORTA runs without offline
+    training, and as the low-accuracy point in the Fig-12 sweep."""
+
+    def __init__(self, n_regions: int, alpha: float = 0.4):
+        self.alpha = alpha
+        self.state = np.full((n_regions,), 1.0 / n_regions)
+
+    def update(self, arrivals: np.ndarray) -> None:
+        tot = arrivals.sum()
+        if tot > 0:
+            self.state = (1 - self.alpha) * self.state + \
+                self.alpha * arrivals / tot
+
+    def predict(self) -> np.ndarray:
+        return self.state / self.state.sum()

@@ -1,0 +1,163 @@
+"""TORTA scheduler — Algorithm 1 end to end.
+
+Phase 1 (macro): normalize demand/supply, Sinkhorn OT, demand predictor,
+RL/smoothed allocation matrix A_t, sample a region per task.
+Phase 2 (micro): Eq-6 server activation per region, Eq-7-10 greedy
+task-server matching, buffering.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.macro import MacroAllocator
+from repro.core.micro import MicroAllocator
+from repro.sim.engine import SlotDecision, SlotObs
+from repro.sim.workload import Task
+
+
+@dataclasses.dataclass
+class TortaScheduler:
+    n_regions: int
+    seed: int = 0
+    eta: float = 0.35
+    sigma: float = 2.0
+    headroom: float = 2.5
+    policy_params: Optional[object] = None
+    predictor: Optional[object] = None
+    # Fig-12 sweep: corrupt the forecast to a target accuracy (1 = oracle-ish)
+    prediction_noise: float = 0.0
+    use_sinkhorn_kernel: bool = False
+    # Phase-1 task distribution: "sample" = per-task sampling from
+    # A_t[origin,:] (Algorithm 1 line 7, paper-faithful — also the better
+    # performer, see EXPERIMENTS.md §Ablations); "sticky" = work-quota
+    # chunking with (origin, model) stickiness (beyond-paper experiment,
+    # wins power/switches on small topologies, loses response at scale).
+    distribution: str = "sample"
+    name: str = "TORTA"
+
+    def __post_init__(self):
+        self.macro = MacroAllocator(self.n_regions, eta=self.eta,
+                                    policy_params=self.policy_params,
+                                    predictor=self.predictor,
+                                    use_sinkhorn_kernel=self.use_sinkhorn_kernel)
+        self.micro = MicroAllocator(sigma=self.sigma, headroom=self.headroom)
+        self.rng = np.random.default_rng(self.seed)
+        self.prediction_log = []
+        self._sticky = {}
+
+    def reset(self) -> None:
+        self.macro.reset()
+        self.micro.reset()
+        self.rng = np.random.default_rng(self.seed)
+
+    # ------------------------------------------------------------------
+
+    def schedule(self, obs: SlotObs, tasks: List[Task]) -> SlotDecision:
+        r = self.n_regions
+        demand = np.zeros(r)
+        for t in tasks:
+            demand[t.origin] += 1
+
+        q_norm = obs.queue_tasks / max(float(obs.queue_tasks.max()), 1.0)
+        predicted = self.macro.predict_next(demand, obs.utilization, q_norm)
+        if self.prediction_noise > 0:
+            noise = self.rng.dirichlet(np.ones(r))
+            predicted = (1 - self.prediction_noise) * predicted \
+                + self.prediction_noise * noise
+        self.prediction_log.append(np.asarray(predicted))
+
+        # supply = capacity net of existing backlog (temporal load awareness)
+        cap = np.maximum(obs.capacities - obs.queue_tasks,
+                         0.05 * np.maximum(obs.capacities, 1e-6))
+        a = self.macro.allocate(
+            demand=demand, predicted=predicted, capacity=cap,
+            power_cost=obs.power_prices, latency=obs.latency,
+            queue=obs.queue_s, utilization=obs.utilization,
+            q_max=10.0 * float(cap.sum()) * obs.slot_seconds)
+
+        # Phase 1: distribute tasks per A_t[origin, :]
+        by_region: Dict[int, List[Task]] = {j: [] for j in range(r)}
+        mask = obs.capacities > 0
+        if self.distribution == "sample":
+            # Algorithm 1 line 7: sample a region per task
+            for task in tasks:
+                pm = a[task.origin] * mask
+                if pm.sum() <= 0:
+                    pm = mask.astype(float)
+                if pm.sum() <= 0:
+                    pm = np.ones(r)
+                pm = pm / pm.sum()
+                by_region[int(self.rng.choice(r, p=pm))].append(task)
+            return self._phase2(obs, a, demand, predicted, by_region)
+        by_origin: Dict[int, List[Task]] = {}
+        for task in tasks:
+            by_origin.setdefault(task.origin, []).append(task)
+        for origin, group in by_origin.items():
+            pm = a[origin] * mask
+            if pm.sum() <= 0:
+                pm = mask.astype(float)
+            if pm.sum() <= 0:
+                pm = np.ones(r)
+            pm = pm / pm.sum()
+            # keep same-model tasks cohesive (warm locality) but apportion
+            # by WORK, greedily filling the region with the largest
+            # remaining work quota — count-based chunking in a fixed order
+            # would systematically dump the heaviest model group on the
+            # highest-probability region every slot.
+            by_model: Dict[str, List[Task]] = {}
+            for tk in group:
+                by_model.setdefault(tk.model, []).append(tk)
+            total_work = sum(tk.work_s for tk in group)
+            quota = pm * total_work
+            q_cap = max(float(quota.max()), 1e-6)
+            # adaptive granularity: under system stress (queues building
+            # anywhere) chunk finely and follow quotas strictly so overload
+            # disperses; in steady state keep big sticky chunks (locality)
+            stress = float(np.max(obs.queue_tasks /
+                                  np.maximum(obs.capacities, 1e-6))) > 0.10
+            chunk_scale = 1.0 if stress else 2.0
+            sticky_slack = 0.5 if stress else -0.25
+            subgroups = sorted(by_model.values(),
+                               key=lambda g2: -sum(tk.work_s for tk in g2))
+            for g2 in subgroups:
+                w2 = sum(tk.work_s for tk in g2)
+                n_chunks = max(1, int(np.ceil(w2 / (chunk_scale * q_cap))))
+                step = max(1, -(-len(g2) // n_chunks))
+                for k0 in range(0, len(g2), step):
+                    part = g2[k0:k0 + step]
+                    pw = sum(tk.work_s for tk in part)
+                    key = (origin, part[0].model)
+                    j = self._sticky.get(key, -1)
+                    if j < 0 or quota[j] < sticky_slack * pw or not mask[j]:
+                        j = int(np.argmax(quota))
+                    self._sticky[key] = j
+                    by_region[j].extend(part)
+                    quota[j] -= pw
+
+        return self._phase2(obs, a, demand, predicted, by_region)
+
+    def _phase2(self, obs, a, demand, predicted, by_region):
+        # Phase 2: micro layer per region
+        r = self.n_regions
+        assignments: Dict[int, Optional[Tuple[int, int]]] = {}
+        activation: Dict[int, int] = {}
+        total = max(demand.sum(), 1.0)
+        inbound = a.T @ demand                     # expected tasks per region
+        pred_inbound = a.T @ (predicted * total)
+        # cold start spans ~2 slots but the forecast is 1 slot ahead:
+        # extrapolate the demand trend so ramps are pre-warmed in time
+        hist = obs.arrivals_history
+        if hist.shape[0] >= 2:
+            prev_tot = max(float(hist[-2].sum()), 1.0)
+            trend = float(np.clip(total / prev_tot, 1.0, 1.6))
+        else:
+            trend = 1.0
+        pred_inbound = pred_inbound * trend
+        for j in range(r):
+            activation[j] = self.micro.activation_target(
+                obs, j, float(pred_inbound[j]))
+            assignments.update(self.micro.assign_region(obs, j, by_region[j]))
+        return SlotDecision(assignments=assignments, activation=activation)

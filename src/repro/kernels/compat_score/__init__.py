@@ -1,0 +1,3 @@
+from repro.kernels.compat_score.kernel import compat_score
+from repro.kernels.compat_score.ops import score_matrix
+from repro.kernels.compat_score.ref import compat_score_ref

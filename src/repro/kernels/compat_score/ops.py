@@ -1,0 +1,15 @@
+"""Public wrapper for batch task-server scoring."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.compat_score.kernel import compat_score
+from repro.kernels.compat_score.ref import compat_score_ref
+
+
+def score_matrix(task_feats, server_feats, locality, *, use_pallas=True,
+                 interpret=True) -> jax.Array:
+    if use_pallas:
+        return compat_score(task_feats, server_feats, locality,
+                            interpret=interpret)
+    return compat_score_ref(task_feats, server_feats, locality)

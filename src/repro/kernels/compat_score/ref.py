@@ -1,0 +1,21 @@
+"""Oracle for the compatibility-score kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.compat_score.kernel import W_HW, W_LOAD, W_LOC
+
+
+def compat_score_ref(task_feats: jax.Array, server_feats: jax.Array,
+                     locality: jax.Array) -> jax.Array:
+    tf = task_feats.astype(jnp.float32)
+    sf = server_feats.astype(jnp.float32)
+    c = jnp.minimum(1.0, sf[None, :, 0] / jnp.maximum(tf[:, None, 0], 1e-9))
+    m = jnp.minimum(1.0, sf[None, :, 1] / jnp.maximum(tf[:, None, 1], 1e-9))
+    match = jnp.einsum("nk,sk->ns", tf[:, 2:5], sf[:, 2:5])
+    hw = c * m * (0.5 + 0.5 * match)
+    load = jnp.exp(-4.0 * (sf[None, :, 5] + sf[None, :, 6])
+                   / jnp.maximum(sf[None, :, 7], 1e-9))
+    return (W_HW * hw + W_LOAD * load
+            + W_LOC * locality.astype(jnp.float32)).astype(jnp.float32)

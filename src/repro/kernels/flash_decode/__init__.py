@@ -1,0 +1,3 @@
+from repro.kernels.flash_decode.kernel import flash_decode
+from repro.kernels.flash_decode.ops import decode_attention
+from repro.kernels.flash_decode.ref import flash_decode_ref

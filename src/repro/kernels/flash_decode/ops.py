@@ -1,0 +1,29 @@
+"""Public wrapper for flash decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.kernel import flash_decode
+from repro.kernels.flash_decode.ref import flash_decode_ref
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, cache_positions: jax.Array, *,
+                     block_c: int = 512, use_pallas: bool = True,
+                     interpret: bool = False) -> jax.Array:
+    """Drop-in for repro.models.layers.decode_attention with Pallas backend.
+
+    q: (B, 1, H, hd); caches: (B, C, KH, hd); cache_positions: (B, C)."""
+    b, _, h, hd = q.shape
+    kh = k_cache.shape[2]
+    g = h // kh
+    qr = q.reshape(b, kh, g, hd)
+    valid = ((cache_positions >= 0) &
+             (cache_positions <= pos[:, None])).astype(jnp.int32)
+    if use_pallas:
+        o = flash_decode(qr, k_cache, v_cache, valid, block_c=block_c,
+                         interpret=interpret)
+    else:
+        o = flash_decode_ref(qr, k_cache, v_cache, valid)
+    return o.reshape(b, 1, h, hd)

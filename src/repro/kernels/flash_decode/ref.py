@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the flash decode kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_decode_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     valid: jax.Array) -> jax.Array:
+    """q: (B, KH, G, hd); caches: (B, C, KH, hd); valid: (B, C) ->
+    (B, KH, G, hd)."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bkgh,bckh->bkgc", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * hd ** -0.5
+    s = jnp.where(valid[:, None, None, :] > 0, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgc,bckh->bkgh", p, v_cache.astype(jnp.float32))
+    return o.astype(q.dtype)

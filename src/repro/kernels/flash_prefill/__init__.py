@@ -1,0 +1,3 @@
+from repro.kernels.flash_prefill.kernel import flash_prefill
+from repro.kernels.flash_prefill.ops import prefill_attention
+from repro.kernels.flash_prefill.ref import flash_prefill_ref

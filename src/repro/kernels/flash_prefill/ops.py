@@ -1,0 +1,26 @@
+"""Public wrapper: (B, S, H, hd) layout adapter for the prefill kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_prefill.kernel import flash_prefill
+from repro.kernels.flash_prefill.ref import flash_prefill_ref
+
+
+def prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      window=None, block_q: int = 256, block_k: int = 256,
+                      use_pallas: bool = True, interpret: bool = False
+                      ) -> jax.Array:
+    """q: (B, S, H, hd); k, v: (B, S, KH, hd) -> (B, S, H, hd), causal."""
+    b, s, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qr = q.reshape(b, s, kh, g, hd).transpose(0, 2, 3, 1, 4)
+    kr = k.transpose(0, 2, 1, 3)
+    vr = v.transpose(0, 2, 1, 3)
+    if use_pallas:
+        o = flash_prefill(qr, kr, vr, window=window, block_q=block_q,
+                          block_k=block_k, interpret=interpret)
+    else:
+        o = flash_prefill_ref(qr, kr, vr, window=window)
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, s, h, hd)

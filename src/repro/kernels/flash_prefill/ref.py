@@ -1,0 +1,23 @@
+"""Oracle for the flash prefill kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_prefill_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      window=None) -> jax.Array:
+    """q: (B, KH, G, S, hd); k, v: (B, KH, S, hd) -> (B, KH, G, S, hd)."""
+    s_len = q.shape[3]
+    hd = q.shape[-1]
+    scores = jnp.einsum("bkgsh,bkth->bkgst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * hd ** -0.5
+    qpos = jnp.arange(s_len)[:, None]
+    kpos = jnp.arange(s_len)[None, :]
+    ok = kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    scores = jnp.where(ok[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgst,bkth->bkgsh", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.selective_scan.kernel import selective_scan
+from repro.kernels.selective_scan.ops import ssm_scan
+from repro.kernels.selective_scan.ref import selective_scan_ref

@@ -1,0 +1,20 @@
+"""Public wrapper: full Mamba inner scan given the block's projections."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.selective_scan.kernel import selective_scan
+from repro.kernels.selective_scan.ref import selective_scan_ref
+
+
+def ssm_scan(dt, bm, cm, x, a, d_skip, *, chunk: int = 128,
+             d_block: int = 512, use_pallas: bool = True,
+             interpret: bool = False) -> jax.Array:
+    if use_pallas:
+        d_in = x.shape[-1]
+        db = d_block
+        while d_in % db and db > 1:
+            db //= 2
+        return selective_scan(dt, bm, cm, x, a, d_skip, chunk=chunk,
+                              d_block=db, interpret=interpret)
+    return selective_scan_ref(dt, bm, cm, x, a, d_skip)

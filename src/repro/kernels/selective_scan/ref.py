@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the selective-scan kernel (sequential recurrence)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(dt: jax.Array, bm: jax.Array, cm: jax.Array,
+                       x: jax.Array, a: jax.Array, d_skip: jax.Array
+                       ) -> jax.Array:
+    """Same contract as kernel.selective_scan."""
+    dtf = dt.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    abar = jnp.exp(dtf[..., None] * af)                    # (B,S,d,N)
+    bx = (dtf * xf)[..., None] * bm.astype(jnp.float32)[:, :, None, :]
+
+    def step(h, inp):
+        ab, b_ = inp
+        h = ab * h + b_
+        return h, h
+
+    def scan_one(ab, b_):
+        h0 = jnp.zeros(ab.shape[1:], jnp.float32)
+        _, hs = jax.lax.scan(step, h0, (ab, b_))
+        return hs
+
+    hs = jax.vmap(scan_one)(abar, bx)                      # (B,S,d,N)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, cm.astype(jnp.float32))
+    y = y + d_skip.astype(jnp.float32) * xf
+    return y.astype(x.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.sinkhorn.kernel import sinkhorn_batched
+from repro.kernels.sinkhorn.ops import sinkhorn_plan
+from repro.kernels.sinkhorn.ref import sinkhorn_ref

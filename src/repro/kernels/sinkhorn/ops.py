@@ -1,0 +1,20 @@
+"""Public wrapper for batched OT plans."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.sinkhorn.kernel import sinkhorn_batched
+from repro.kernels.sinkhorn.ref import sinkhorn_ref
+
+
+def sinkhorn_plan(mu: jax.Array, nu: jax.Array, cost: jax.Array, *,
+                  reg: float = 0.05, n_iters: int = 100,
+                  use_pallas: bool = True, interpret: bool = True
+                  ) -> jax.Array:
+    """(B, R) x (B, R) x (B, R, R) -> (B, R, R) transport plans.
+
+    interpret defaults True: this repo runs on CPU; on TPU pass False."""
+    if use_pallas:
+        return sinkhorn_batched(mu, nu, cost, reg=reg, n_iters=n_iters,
+                                interpret=interpret)
+    return sinkhorn_ref(mu, nu, cost, reg=reg, n_iters=n_iters)

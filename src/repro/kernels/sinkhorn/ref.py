@@ -1,0 +1,11 @@
+"""Oracle: the batched jnp Sinkhorn from repro.core.ot."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.ot import sinkhorn
+
+
+def sinkhorn_ref(mu: jax.Array, nu: jax.Array, cost: jax.Array, *,
+                 reg: float = 0.05, n_iters: int = 100) -> jax.Array:
+    return sinkhorn(mu, nu, cost, reg=reg, n_iters=n_iters)

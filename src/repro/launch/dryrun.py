@@ -1,0 +1,205 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, extract memory/cost/collective analyses, and emit the
+roofline terms.
+
+MUST be a fresh process (the XLA flag above is read at first jax init).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single --out benchmarks/results/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (SHAPES, get_config, list_archs, param_count,
+                           with_sliding_window_variant)
+from repro.launch import roofline as RL
+from repro.launch.hlo_analysis import (cost_fields, memory_fields,
+                                       parse_collectives)
+from repro.launch.inputs import cache_specs, input_specs
+from repro.launch.mesh import make_production_mesh, mesh_chips
+from repro.models.model import Model
+from repro.optim.adam import Adam
+from repro.serving.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.sharding.specs import AxisRules
+
+_is_p = lambda x: isinstance(x, P)
+
+# FSDP decision: bytes/chip under pure TP beyond this budget -> shard big
+# weights over the data axis too (ZeRO-style storage sharding).
+FSDP_BUDGET_BYTES = 8e9
+
+
+def _ns(mesh, pspecs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs, is_leaf=_is_p)
+
+
+def pick_rules(cfg, mesh, mode: str, seq_len: int = 0) -> AxisRules:
+    rules = AxisRules(mesh=mesh)
+    n = param_count(cfg)
+    tp = rules.axis_size("model")
+    bytes_per_param = 10 if mode == "train" else 2   # bf16 + f32 m/v (train)
+    per_chip = n * bytes_per_param / tp
+    # sequence-parallel activations for long full-sequence passes of
+    # non-MoE archs (see EXPERIMENTS.md §Perf iteration C)
+    seq_axis = None
+    if (mode in ("prefill", "train") and cfg.moe is None
+            and not cfg.has_mamba and cfg.encoder is None
+            and seq_len % tp == 0 and seq_len >= 4096):
+        seq_axis = "model"
+    return AxisRules(mesh=mesh, fsdp=per_chip > FSDP_BUDGET_BYTES,
+                     seq_axis=seq_axis)
+
+
+def run_pair(arch: str, shape_name: str, mesh_kind: str, *,
+             q_chunk=512, kv_chunk=2048, fsdp=None) -> dict:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    variant = "baseline"
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        cfg = with_sliding_window_variant(cfg)
+        variant = "swa"
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rules = pick_rules(cfg, mesh, shape.mode, shape.seq_len)
+    if fsdp is not None:
+        rules = AxisRules(mesh=mesh, fsdp=fsdp)
+    model = Model(cfg, rules, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                  remat=(shape.mode == "train"))
+
+    p_sds = model.shapes(jnp.bfloat16)
+    p_specs = model.pspecs()
+    p_sh = _ns(mesh, p_specs)
+    b_sds, b_specs = input_specs(model, shape)
+    b_sh = _ns(mesh, b_specs)
+    rep = NamedSharding(mesh, P())
+
+    t0 = time.time()
+    if shape.mode == "train":
+        from repro.optim.adam import AdamState
+        opt = Adam(lr=1e-4)
+        m_sds = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                             p_sds)
+        opt_sds = AdamState(jax.ShapeDtypeStruct((), jnp.int32), m_sds, m_sds)
+        opt_sh = AdamState(rep, p_sh, p_sh)
+        step = make_train_step(model, opt)
+        metrics_sh = {"loss": rep, "moe_aux": rep, "tokens": rep}
+        jitted = jax.jit(step,
+                         in_shardings=(p_sh, opt_sh, b_sh),
+                         out_shardings=(p_sh, opt_sh, metrics_sh),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(p_sds, opt_sds, b_sds)
+    elif shape.mode == "prefill":
+        step = make_prefill_step(model, cache_len=shape.seq_len)
+        c_sds, c_specs = cache_specs(model, shape)
+        c_sh = _ns(mesh, c_specs)
+        logit_sh = NamedSharding(mesh, P(b_specs["tokens"][0], None))
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh),
+                         out_shardings=(logit_sh, c_sh))
+        lowered = jitted.lower(p_sds, b_sds)
+    else:  # decode
+        step = make_serve_step(model)
+        c_sds, c_specs = cache_specs(model, shape)
+        c_sh = _ns(mesh, c_specs)
+        bspec = b_specs["tokens"][0]
+        out_sh = {"next_token": NamedSharding(mesh, P(bspec)),
+                  "logits": NamedSharding(mesh, P(bspec, None))}
+        jitted = jax.jit(step, in_shardings=(p_sh, c_sh, b_sh),
+                         out_shardings=(out_sh, c_sh), donate_argnums=(1,))
+        lowered = jitted.lower(p_sds, c_sds, b_sds)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    chips = mesh_chips(mesh)
+    cost = cost_fields(compiled)
+    mem = memory_fields(compiled)
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    coll = parse_collectives(hlo, default_group=chips)
+    rf = RL.build(arch, shape, mesh_kind, chips, cost, coll, cfg,
+                  model_par=rules.axis_size("model"), fsdp=rules.fsdp)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "variant": variant, "chips": chips, "fsdp": rules.fsdp,
+        "params": param_count(cfg),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "cost": cost["raw"], "memory": mem,
+        "collectives": {k: {kk: (int(vv) if kk != "link_bytes" else float(vv))
+                            for kk, vv in v.items()}
+                        for k, v in coll["per_op"].items()},
+        "collective_link_bytes": coll["link_bytes"],
+        "roofline": rf.to_dict(),
+        "status": "ok",
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--q-chunk", type=int, default=512)
+    ap.add_argument("--kv-chunk", type=int, default=2048)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    pairs = []
+    if args.all:
+        for a in list_archs():
+            for s in SHAPES:
+                pairs.append((a, s))
+    else:
+        assert args.arch and args.shape
+        pairs = [(args.arch, args.shape)]
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    n_ok = n_fail = 0
+    for arch, shape in pairs:
+        fn = outdir / f"{arch}_{shape}_{args.mesh}.json"
+        if args.skip_existing and fn.exists():
+            prev = json.loads(fn.read_text())
+            if prev.get("status") == "ok":
+                print(f"[skip] {arch} x {shape} ({args.mesh})", flush=True)
+                n_ok += 1
+                continue
+        print(f"[dryrun] {arch} x {shape} ({args.mesh}) ...", flush=True)
+        try:
+            rec = run_pair(arch, shape, args.mesh,
+                           q_chunk=args.q_chunk, kv_chunk=args.kv_chunk)
+            n_ok += 1
+            r = rec["roofline"]
+            print(f"  ok: compile={rec['compile_s']}s "
+                  f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+                  f"collective={r['collective_s']:.4f}s "
+                  f"bottleneck={r['bottleneck']}", flush=True)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape, "mesh": args.mesh,
+                   "status": "fail", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            n_fail += 1
+            print(f"  FAIL: {type(e).__name__}: {str(e)[:300]}", flush=True)
+        fn.write_text(json.dumps(rec, indent=1, default=float))
+    print(f"done: {n_ok} ok, {n_fail} fail", flush=True)
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,200 @@
+"""Post-SPMD HLO analysis: FLOPs/bytes from ``cost_analysis`` (with analytic
+fallbacks) and collective-traffic accounting parsed from the optimized HLO.
+
+``collective_bytes`` is reported as *bytes crossing links per device*, using
+the standard ring-cost factors:
+
+  all-gather       result * (n-1)/n
+  reduce-scatter   operand * (n-1)/n
+  all-reduce       2 * size * (n-1)/n
+  all-to-all       size * (n-1)/n
+  collective-permute  size
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Any, Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|tuple\([^)]*\)|[\w\[\],{}: ]+?))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_BLOCK_RE = re.compile(r"^(ENTRY\s+)?(%[\w.\-]+)\s*\(")
+_WHILE_RE = re.compile(r" while\(")
+_COND_RE = re.compile(r"condition=(%[\w.\-]+)")
+_BODY_RE = re.compile(r"body=(%[\w.\-]+)")
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)="
+                      r"\{?(%[\w.\-]+(?:,\s*%[\w.\-]+)*)\}?")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of all array shapes appearing in a result-type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _line_collective(line: str, default_group: int):
+    """Parse one HLO line; return (op, result_bytes, link_bytes) or None."""
+    m = _COLL_RE.search(line)
+    if m is None or "-done(" in line:
+        return None
+    result_str, op = m.group(1), m.group(2)
+    rb = shape_bytes(result_str)
+    if rb == 0:
+        return None
+    g = _GROUPS_RE.search(line)
+    if g:
+        n = len(g.group(1).split(","))
+    else:
+        g2 = _GROUPS_V2_RE.search(line)
+        n = int(g2.group(2)) if g2 else default_group
+    n = max(n, 2)
+    frac = (n - 1) / n
+    if op == "all-gather":
+        link = rb * frac
+    elif op == "reduce-scatter":
+        link = rb * frac * n  # result is 1/n of operand
+    elif op == "all-reduce":
+        link = 2 * rb * frac
+    elif op == "all-to-all":
+        link = rb * frac
+    else:  # collective-permute
+        link = rb
+    return op, rb, link
+
+
+def _parse_blocks(hlo_text: str):
+    """Split HLO text into computation blocks. Returns (blocks, entry)."""
+    blocks: Dict[str, list] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _BLOCK_RE.match(line)
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(2)
+            blocks[cur] = []
+            if m.group(1):
+                entry = cur
+        elif cur is not None:
+            if line.startswith("}"):
+                cur = None
+            else:
+                blocks[cur].append(line)
+    return blocks, entry
+
+
+def _trip_count(blocks: Dict[str, list], cond: str) -> int:
+    """Scan trip count = the s32[] loop bound constant in the condition."""
+    best = 1
+    for line in blocks.get(cond, ()):
+        for c in _CONST_RE.findall(line):
+            best = max(best, int(c))
+    return best
+
+
+def parse_collectives(hlo_text: str, default_group: int) -> Dict[str, Any]:
+    """Collective traffic of one executed step, from post-SPMD per-device HLO.
+
+    Walks the computation call graph from ENTRY, multiplying contributions
+    of while-loop bodies by their trip counts (jax.lax.scan lowers to while;
+    XLA's flat text otherwise counts a 94-layer scan's collectives once).
+    Returns {op: {count, result_bytes, link_bytes}} + total link bytes."""
+    blocks, entry = _parse_blocks(hlo_text)
+    if entry is None:  # fallback: flat scan, no loop scaling
+        blocks = {"__all__": hlo_text.splitlines()}
+        entry = "__all__"
+
+    per_op: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "result_bytes": 0, "link_bytes": 0.0})
+
+    def visit(name: str, mult: float, stack=()):
+        if name not in blocks or name in stack:
+            return
+        for line in blocks[name]:
+            got = _line_collective(line, default_group)
+            if got is not None:
+                op, rb, link = got
+                d = per_op[op]
+                d["count"] += mult
+                d["result_bytes"] += rb * mult
+                d["link_bytes"] += link * mult
+                continue
+            if _WHILE_RE.search(line):
+                b = _BODY_RE.search(line)
+                c = _COND_RE.search(line)
+                if b:
+                    trips = _trip_count(blocks, c.group(1)) if c else 1
+                    visit(b.group(1), mult * trips, stack + (name,))
+                continue
+            # conditionals / calls execute once per visit
+            if " call(" in line or "conditional(" in line:
+                for grp in _CALL_RE.findall(line):
+                    for callee in grp.split(","):
+                        callee = callee.strip()
+                        if callee.startswith("%") and "while" not in line:
+                            visit(callee, mult, stack + (name,))
+
+    visit(entry, 1.0)
+    total = sum(d["link_bytes"] for d in per_op.values())
+    return {"per_op": dict(per_op), "link_bytes": total}
+
+
+def cost_fields(compiled) -> Dict[str, Optional[float]]:
+    """flops / bytes accessed from compiled.cost_analysis(), tolerant of
+    backend differences (CPU may miss fields)."""
+    out = {"flops": None, "bytes": None, "raw": {}}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        if ca:
+            out["raw"] = {k: float(v) for k, v in ca.items()
+                          if isinstance(v, (int, float)) and
+                          ("bytes" in k or k in ("flops", "transcendentals",
+                                                 "optimal_seconds"))}
+            out["flops"] = float(ca.get("flops", 0.0)) or None
+            out["bytes"] = float(ca.get("bytes accessed", 0.0)) or None
+    except Exception as e:  # pragma: no cover
+        out["error"] = str(e)
+    return out
+
+
+def memory_fields(compiled) -> Dict[str, Optional[float]]:
+    out: Dict[str, Any] = {}
+    try:
+        ma = compiled.memory_analysis()
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, f, None)
+            if v is not None:
+                out[f] = int(v)
+        if out:
+            out["total_hbm_bytes"] = (
+                out.get("argument_size_in_bytes", 0)
+                + out.get("output_size_in_bytes", 0)
+                + out.get("temp_size_in_bytes", 0)
+                - out.get("alias_size_in_bytes", 0))
+    except Exception as e:  # pragma: no cover
+        out["error"] = str(e)
+    return out

@@ -1,0 +1,70 @@
+"""``input_specs()``: ShapeDtypeStruct stand-ins + PartitionSpecs for every
+model input, per (architecture × run shape).  No device allocation — the
+dry-run lowers against these directly.
+
+Modality frontends are stubbed here (assignment carve-out): whisper receives
+precomputed conv/mel frame embeddings, paligemma precomputed SigLIP patch
+embeddings — both as correctly-shaped bf16 inputs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ArchConfig, RunShape
+from repro.models.model import Model
+from repro.sharding.specs import AxisRules, batch_axes
+
+Tree = Any
+
+
+def _batch_spec(rules: AxisRules, batch: int) -> Optional[Any]:
+    ba = batch_axes(rules)
+    if rules.mesh is None:
+        return ba
+    return ba if batch % max(rules.axis_size(ba), 1) == 0 else None
+
+
+def input_specs(model: Model, shape: RunShape, *, dtype=jnp.bfloat16
+                ) -> Tuple[Dict[str, jax.ShapeDtypeStruct], Dict[str, P]]:
+    """Returns (shape-structs, pspecs) for the step's ``batch`` argument."""
+    cfg = model.cfg
+    rules = model.rules
+    B, S = shape.global_batch, shape.seq_len
+    bs = _batch_spec(rules, B)
+    sds: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+
+    s_text = S
+    if cfg.vision is not None:
+        s_text = S - cfg.vision.num_patches
+        sds["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision.num_patches, cfg.vision.embed_dim), dtype)
+        specs["patches"] = P(bs, None, None)
+    if cfg.encoder is not None and shape.mode != "decode":
+        sds["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder.src_len, cfg.d_model), dtype)
+        specs["frames"] = P(bs, None, None)
+
+    if shape.mode == "train":
+        sds["tokens"] = jax.ShapeDtypeStruct((B, s_text), jnp.int32)
+        sds["labels"] = jax.ShapeDtypeStruct((B, s_text), jnp.int32)
+        specs["tokens"] = P(bs, None)
+        specs["labels"] = P(bs, None)
+    elif shape.mode == "prefill":
+        sds["tokens"] = jax.ShapeDtypeStruct((B, s_text), jnp.int32)
+        specs["tokens"] = P(bs, None)
+    else:  # decode: one new token; the cache is a separate argument
+        sds["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        specs["tokens"] = P(bs, None)
+    return sds, specs
+
+
+def cache_specs(model: Model, shape: RunShape, *, dtype=jnp.bfloat16
+                ) -> Tuple[Tree, Tree]:
+    sds = model.cache_shapes(shape.global_batch, shape.seq_len, dtype=dtype)
+    specs = model.cache_pspecs(shape.global_batch, shape.seq_len)
+    return sds, specs

@@ -1,0 +1,3 @@
+from repro.models.model import Model
+from repro.models.params import (count_params, init_params, param_pspecs,
+                                 param_shapes)

@@ -1,0 +1,153 @@
+"""Attention sublayer: QKV projections, RoPE, KV-cache management (including
+rotating sliding-window caches for long-context decode), cross-attention."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ArchConfig
+from repro.models.layers import (apply_rope, decode_attention, gqa_attention)
+from repro.models.params import ParamDesc
+from repro.sharding.specs import AxisRules, batch_axes, constrain
+
+
+def attn_param_descs(cfg: ArchConfig, rules: AxisRules, *, cross: bool = False) -> Dict:
+    d, h, kh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    tp = rules.tensor_axis
+    # head-sharded QKV forces activation replication when activations are
+    # sequence-sharded — use the d-sharded layout there (§Perf C4)
+    q_ok = (rules.mesh is None or rules.divisible(h, tp)) \
+        and rules.seq_axis is None
+    kv_tp = tp if (rules.mesh is None or rules.divisible(kh, tp)
+                   ) and rules.seq_axis is None else None
+    if q_ok:
+        # megatron: shard Q heads over model; KV heads when divisible
+        p = {
+            "wq": ParamDesc((d, h, hd), P(None, tp, None)),
+            "wk": ParamDesc((d, kh, hd), P(None, kv_tp, None)),
+            "wv": ParamDesc((d, kh, hd), P(None, kv_tp, None)),
+            "wo": ParamDesc((h, hd, d), P(tp, None, None), scale=1.0),
+        }
+        bq = P(tp, None)
+    else:
+        # few-head models (whisper h=12, paligemma h=8 on 16-way TP): shard
+        # the d_model contraction dim instead (XLA inserts the psum)
+        p = {
+            "wq": ParamDesc((d, h, hd), P(tp, None, None)),
+            "wk": ParamDesc((d, kh, hd), P(tp, None, None)),
+            "wv": ParamDesc((d, kh, hd), P(tp, None, None)),
+            "wo": ParamDesc((h, hd, d), P(None, None, tp), scale=1.0),
+        }
+        bq = P(None, None)
+    if cfg.qkv_bias:
+        p["bq"] = ParamDesc((h, hd), bq, "zeros")
+        p["bk"] = ParamDesc((kh, hd), P(kv_tp, None), "zeros")
+        p["bv"] = ParamDesc((kh, hd), P(kv_tp, None), "zeros")
+    return p
+
+
+def _project_qkv(p: Dict, x: jax.Array, x_kv: Optional[jax.Array] = None):
+    x_kv = x if x_kv is None else x_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x_kv, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x_kv, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def _out_proj(p: Dict, o: jax.Array, rules: AxisRules) -> jax.Array:
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    seq = rules.seq_axis if y.shape[1] > 1 else None
+    return constrain(y, rules, P(batch_axes(rules), seq, None))
+
+
+def attn_forward(p: Dict, x: jax.Array, positions: jax.Array, cfg: ArchConfig,
+                 rules: AxisRules, *, prefix_len: int = 0,
+                 use_rope: bool = True,
+                 window: Optional[int] = None) -> jax.Array:
+    """Full-sequence (train/prefill) self-attention. positions: (S,)."""
+    q, k, v = _project_qkv(p, x)
+    ba = batch_axes(rules)
+    q = constrain(q, rules, P(ba, None, rules.tensor_axis, None))
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    win = window if window is not None else cfg.sliding_window
+    o = gqa_attention(q, k, v, positions, positions, causal=True, window=win,
+                      prefix_len=prefix_len)
+    return _out_proj(p, o, rules)
+
+
+def cross_attn_forward(p: Dict, x: jax.Array, kv_src: jax.Array,
+                       cfg: ArchConfig, rules: AxisRules) -> jax.Array:
+    """Encoder-decoder cross-attention (no rope, no causal mask)."""
+    q, k, v = _project_qkv(p, x, kv_src)
+    sq = jnp.arange(x.shape[1])
+    sk = jnp.arange(kv_src.shape[1])
+    o = gqa_attention(q, k, v, sq, sk, causal=False, window=None)
+    return _out_proj(p, o, rules)
+
+
+def cross_attn_cache(p: Dict, kv_src: jax.Array) -> Dict:
+    """Precompute cross-attention K/V once per request (whisper decode)."""
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"])
+    if "bk" in p:
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return {"k": k, "v": v}
+
+
+def cross_attn_decode(p: Dict, x: jax.Array, cache: Dict,
+                      rules: AxisRules) -> jax.Array:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    src_len = cache["k"].shape[1]
+    pos = jnp.full((x.shape[0],), src_len, jnp.int32)  # attend to everything
+    cache_pos = jnp.broadcast_to(jnp.arange(src_len), (x.shape[0], src_len))
+    o = decode_attention(q, cache["k"], cache["v"], pos, cache_pos)
+    return _out_proj(p, o, rules)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode): fixed-size, optionally rotating (sliding window)
+# ---------------------------------------------------------------------------
+
+
+def kv_cache_len(cfg: ArchConfig, seq_len: int, window: Optional[int] = None) -> int:
+    win = window if window is not None else cfg.sliding_window
+    return min(seq_len, win) if win else seq_len
+
+
+def attn_decode_step(p: Dict, x: jax.Array, pos: jax.Array, kc: jax.Array,
+                     vc: jax.Array, cfg: ArchConfig, rules: AxisRules, *,
+                     use_rope: bool = True,
+                     window: Optional[int] = None) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step. x: (B, 1, D); pos: (B,) absolute position of the new
+    token; kc/vc: (B, C, KH, hd). Returns (out, kc', vc')."""
+    B, _, _ = x.shape
+    C = kc.shape[1]
+    q, k, v = _project_qkv(p, x)
+    if use_rope:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    slot = pos % C                                    # rotating when C < seq
+    kc = jax.vmap(lambda c, kk, s: jax.lax.dynamic_update_slice_in_dim(c, kk, s, 0)
+                  )(kc, k, slot)
+    vc = jax.vmap(lambda c, vv, s: jax.lax.dynamic_update_slice_in_dim(c, vv, s, 0)
+                  )(vc, v, slot)
+    # absolute position held by each slot: largest p' <= pos with p' % C == slot_idx
+    idx = jnp.arange(C)[None, :]
+    cache_pos = pos[:, None] - ((pos[:, None] - idx) % C)
+    win = window if window is not None else cfg.sliding_window
+    if win is not None:
+        cache_pos = jnp.where(cache_pos > pos[:, None] - win, cache_pos, -1)
+    o = decode_attention(q, kc, vc, pos, cache_pos)
+    return _out_proj(p, o, rules), kc, vc

@@ -1,0 +1,119 @@
+"""Block assembly: FFN variants + one "period group" of sublayers.
+
+Architectures are expressed as a repeating period of sublayers
+(cfg.layer_period), scanned over ``num_layers // period`` groups with stacked
+params — keeping the lowered HLO small even for 94-layer models.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models.layers import act_fn, norm
+from repro.models.params import ParamDesc
+from repro.sharding.specs import AxisRules, batch_axes, constrain
+
+
+# ---------------------------------------------------------------------------
+# FFN (dense)
+# ---------------------------------------------------------------------------
+
+
+def mlp_param_descs(cfg: ArchConfig, rules: AxisRules) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    tp = rules.tensor_axis
+    fs = "data" if (rules.fsdp and rules.divisible(f, "data")) else None
+    if cfg.act in ("silu", "gelu_glu"):
+        return {
+            "w_gate": ParamDesc((d, f), P(fs, tp)),
+            "w_up": ParamDesc((d, f), P(fs, tp)),
+            "w_down": ParamDesc((f, d), P(tp, fs)),
+        }
+    return {
+        "w_up": ParamDesc((d, f), P(fs, tp)),
+        "b_up": ParamDesc((f,), P(tp), "zeros"),
+        "w_down": ParamDesc((f, d), P(tp, fs)),
+        "b_down": ParamDesc((d,), P(None), "zeros"),
+    }
+
+
+def mlp_forward(p: Dict, x: jax.Array, cfg: ArchConfig, rules: AxisRules) -> jax.Array:
+    act = act_fn(cfg.act)
+    if "w_gate" in p:
+        h = act(jnp.einsum("bsd,df->bsf", x, p["w_gate"])) * \
+            jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    else:
+        h = act(jnp.einsum("bsd,df->bsf", x, p["w_up"]) + p["b_up"])
+    seq = rules.seq_axis if x.shape[1] > 1 else None
+    if seq is None:
+        h = constrain(h, rules, P(batch_axes(rules), None, rules.tensor_axis))
+    else:
+        # sequence-parallel: hidden stays sequence-sharded; XLA gathers the
+        # (smaller, per-layer) weights instead of replicating activations
+        h = constrain(h, rules, P(batch_axes(rules), seq, None))
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    if "b_down" in p:
+        y = y + p["b_down"]
+    return constrain(y, rules, P(batch_axes(rules), seq, None))
+
+
+# ---------------------------------------------------------------------------
+# Sublayer descriptors (single source for params + apply)
+# ---------------------------------------------------------------------------
+
+
+def norm_descs(cfg: ArchConfig) -> Dict:
+    d = {"scale": ParamDesc((cfg.d_model,), P(None), "ones")}
+    if cfg.norm_kind == "layernorm":
+        d["bias"] = ParamDesc((cfg.d_model,), P(None), "zeros")
+    return d
+
+
+def sublayer_descs(cfg: ArchConfig, rules: AxisRules, *, with_cross: bool
+                   ) -> Dict[str, Dict]:
+    """Param descriptors for one period of sublayers.
+
+    Keys "pos{i}" -> {"mixer_norm", "mixer", ["cross_norm", "cross"],
+                      ["ffn_norm", "ffn"]}  (ffn absent when d_ff==0 & no moe)
+    """
+    period = cfg.layer_period
+    assert len(period) % max(cfg.moe_every, 1) == 0 or len(period) == 1 or cfg.moe is None
+    out = {}
+    for i, kind in enumerate(period):
+        sub: Dict[str, Any] = {"mixer_norm": norm_descs(cfg)}
+        if kind == "attn":
+            sub["mixer"] = attn_mod.attn_param_descs(cfg, rules)
+            if with_cross:
+                sub["cross_norm"] = norm_descs(cfg)
+                sub["cross"] = attn_mod.attn_param_descs(cfg, rules, cross=True)
+        else:
+            sub["mixer"] = mamba_mod.mamba_param_descs(cfg, rules)
+        if cfg.layer_uses_moe(i):
+            sub["ffn_norm"] = norm_descs(cfg)
+            sub["ffn"] = moe_mod.moe_param_descs(cfg, rules)
+        elif cfg.d_ff:
+            sub["ffn_norm"] = norm_descs(cfg)
+            sub["ffn"] = mlp_param_descs(cfg, rules)
+        out[f"pos{i}"] = sub
+    return out
+
+
+def apply_ffn(sub: Dict, x: jax.Array, cfg: ArchConfig, rules: AxisRules,
+              pos_idx: int) -> Tuple[jax.Array, jax.Array]:
+    """Residual FFN sublayer. Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if "ffn" not in sub:
+        return x, aux
+    h = norm(x, sub["ffn_norm"], cfg.norm_kind, cfg.norm_eps)
+    if cfg.layer_uses_moe(pos_idx):
+        y, aux = moe_mod.moe_ffn(sub["ffn"], h, cfg, rules, act_fn(cfg.act))
+    else:
+        y = mlp_forward(sub["ffn"], h, cfg, rules)
+    return x + y, aux

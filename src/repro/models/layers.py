@@ -1,0 +1,203 @@
+"""Primitive layers: norms, activations, RoPE, masks, attention math.
+
+Pure functions over explicit param dicts (pytrees of arrays).  Attention is
+written flash-style (blocked over query chunks with running softmax over KV
+chunks) so that 32k/500k-token prefills never materialize an S×S score
+matrix — the XLA analogue of the Pallas `flash_decode` kernel used on TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm(x: jax.Array, p: dict, kind: str, eps: float) -> jax.Array:
+    if kind == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], eps)
+    return rmsnorm(x, p["scale"], eps)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": functools.partial(jax.nn.gelu, approximate=True),
+            "gelu_glu": functools.partial(jax.nn.gelu, approximate=True)}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int) -> jax.Array:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / dim))
+    pe = jnp.zeros((length, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, causal / sliding-window / prefix-LM), flash-style chunked
+# ---------------------------------------------------------------------------
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, *, causal: bool,
+               window: Optional[int], prefix_len: int,
+               k_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Additive bias (q, k) given absolute positions.
+
+    prefix-LM: positions < prefix_len attend bidirectionally within the
+    prefix (PaliGemma image tokens)."""
+    qp = q_pos[:, None]
+    kp = k_pos[None, :]
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        c = kp <= qp
+        if prefix_len:
+            c = c | (kp < prefix_len)
+        ok &= c
+    if window is not None:
+        w = kp > (qp - window)
+        if prefix_len:
+            w = w | (kp < prefix_len)
+        ok &= w
+    if k_valid is not None:
+        ok &= k_valid[None, :]
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  q_pos: jax.Array, k_pos: jax.Array, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  prefix_len: int = 0, k_valid: Optional[jax.Array] = None,
+                  q_chunk: int = 1024, kv_chunk: int = 2048) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KH, hd) -> (B, Sq, H, hd).
+
+    Flash-style: scan over query chunks; within each, scan over KV chunks
+    with running (max, denom, accum) — O(chunk) memory at any sequence
+    length.  Falls back to a single chunk for short sequences.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = hd ** -0.5
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Sk)
+    # pad to multiples
+    n_q = -(-Sq // qc)
+    n_k = -(-Sk // kc)
+    pad_q = n_q * qc - Sq
+    pad_k = n_k * kc - Sk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad_q))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad_k), constant_values=-1)
+        kv_mask = jnp.arange(n_k * kc) < Sk
+        k_valid = kv_mask if k_valid is None else (jnp.pad(k_valid, (0, pad_k)) & kv_mask)
+
+    qr = q.reshape(B, n_q, qc, KH, G, hd)
+    kr = k.reshape(B, n_k, kc, KH, hd)
+    vr = v.reshape(B, n_k, kc, KH, hd)
+    qpr = q_pos.reshape(n_q, qc)
+    kpr = k_pos.reshape(n_k, kc)
+    kvr = None if k_valid is None else k_valid.reshape(n_k, kc)
+
+    def q_step(_, qi):
+        qblk, qp = qr[:, qi], qpr[qi]            # (B, qc, KH, G, hd), (qc,)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kp = kr[:, ki], vr[:, ki], kpr[ki]
+            bias = _mask_bias(qp, kp, causal=causal, window=window,
+                              prefix_len=prefix_len,
+                              k_valid=None if kvr is None else kvr[ki])
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            s = s + bias[None, None, None]
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KH, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, KH, G, qc, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(n_k))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # (B, KH, G, qc, hd)
+        return _, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(n_q))
+    # outs: (n_q, B, KH, G, qc, hd) -> (B, Sq, H, hd)
+    out = jnp.transpose(outs, (1, 0, 4, 2, 3, 5)).reshape(B, n_q * qc, H, hd)
+    if pad_q:
+        out = out[:, :Sq]
+    return out
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, cache_positions: jax.Array) -> jax.Array:
+    """Single-token decode attention against a (possibly rotating) cache.
+
+    q: (B, 1, H, hd); caches: (B, C, KH, hd); cache_positions: (B, C) absolute
+    position held by each slot (-1 = empty).  Attends to slots with
+    0 <= cache_pos <= pos."""
+    B, _, H, hd = q.shape
+    C, KH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KH
+    qr = q.reshape(B, KH, G, hd)
+    s = jnp.einsum("bkgh,bckh->bkgc", qr, k_cache,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    valid = (cache_positions >= 0) & (cache_positions <= pos[:, None])
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgc,bckh->bkgh", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)

@@ -1,0 +1,136 @@
+"""Mamba-1 selective-state-space block.
+
+Prefill/train uses a parallel associative scan over the sequence (TPU-
+friendly: log-depth, large fused elementwise blocks); decode keeps an O(1)
+recurrent state ``(B, d_inner, d_state)`` plus a depthwise-conv ring buffer
+``(B, d_conv-1, d_inner)``.  The inner dim is tensor-parallel over ``model``
+(heads-free, so the split is exact), making the block's psum pattern match
+the attention path.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ArchConfig, SSMConfig
+from repro.models.params import ParamDesc
+from repro.sharding.specs import AxisRules, batch_axes, constrain
+
+
+def _dims(cfg: ArchConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm or SSMConfig()
+    d_in = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return d_in, s.d_state, s.d_conv, dt_rank
+
+
+def mamba_param_descs(cfg: ArchConfig, rules: AxisRules) -> Dict:
+    d = cfg.d_model
+    d_in, n, d_conv, dt_rank = _dims(cfg)
+    tp = rules.tensor_axis
+    return {
+        "in_proj": ParamDesc((d, 2 * d_in), P(None, tp)),
+        "conv_w": ParamDesc((d_conv, d_in), P(None, tp), "conv"),
+        "conv_b": ParamDesc((d_in,), P(tp), "zeros"),
+        "x_proj": ParamDesc((d_in, dt_rank + 2 * n), P(tp, None)),
+        "dt_proj": ParamDesc((dt_rank, d_in), P(None, tp)),
+        "dt_bias": ParamDesc((d_in,), P(tp), "dt_bias"),
+        "a_log": ParamDesc((d_in, n), P(tp, None), "a_log"),
+        "d_skip": ParamDesc((d_in,), P(tp), "ones"),
+        "out_proj": ParamDesc((d_in, d), P(tp, None)),
+    }
+
+
+def _ssm_inputs(p: Dict, x: jax.Array, cfg: ArchConfig):
+    """x: (..., d_in) post-conv activations -> (dt, B, C) with
+    dt: (..., d_in), B/C: (..., N)."""
+    _, n, _, dt_rank = _dims(cfg)
+    proj = jnp.einsum("...i,ir->...r", x, p["x_proj"])
+    dt, b, c = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("...r,ri->...i", dt, p["dt_proj"])
+                         + p["dt_bias"])
+    return dt.astype(jnp.float32), b.astype(jnp.float32), c.astype(jnp.float32)
+
+
+def _causal_conv(p: Dict, x: jax.Array) -> jax.Array:
+    """Depthwise causal conv along S. x: (B, S, d_in)."""
+    d_conv = p["conv_w"].shape[0]
+    xp = jnp.pad(x, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    # stack shifted views: sum_k w[k] * x[s - (d_conv-1) + k]
+    s = x.shape[1]
+    out = sum(xp[:, k:k + s] * p["conv_w"][k] for k in range(d_conv))
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def mamba_forward(p: Dict, x: jax.Array, cfg: ArchConfig, rules: AxisRules,
+                  *, return_state: bool = False):
+    """Full-sequence scan. x: (B, S, D) -> (B, S, D)[, (h_last, conv_state)]."""
+    ba = batch_axes(rules)
+    tp = rules.tensor_axis
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xz = constrain(xz, rules, P(ba, None, tp))
+    xi_raw, z = jnp.split(xz, 2, axis=-1)                # (B,S,d_in)
+    xi = _causal_conv(p, xi_raw)
+    dt, bm, cm = _ssm_inputs(p, xi, cfg)                 # f32
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))         # (d_in, N)
+    # discretize: abar (B,S,d_in,N), bx (B,S,d_in,N)
+    abar = jnp.exp(dt[..., None] * a)
+    bx = (dt * xi.astype(jnp.float32))[..., None] * bm[..., None, :]
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (abar, bx), axis=1)
+    y = jnp.einsum("bsin,bsn->bsi", hs, cm)
+    y = y + p["d_skip"].astype(jnp.float32) * xi.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    out = constrain(out, rules, P(ba, None, None))
+    if not return_state:
+        return out
+    d_conv = p["conv_w"].shape[0]
+    # raw (pre-conv) inputs of the last d_conv-1 steps feed the decode ring
+    s = xi_raw.shape[1]
+    need = d_conv - 1
+    if need == 0:
+        conv_state = jnp.zeros((x.shape[0], 0, xi_raw.shape[-1]), x.dtype)
+    elif s >= need:
+        conv_state = xi_raw[:, -need:]
+    else:
+        conv_state = jnp.pad(xi_raw, ((0, 0), (need - s, 0), (0, 0)))
+    return out, (hs[:, -1], conv_state)
+
+
+def mamba_state_shapes(cfg: ArchConfig, batch: int):
+    d_in, n, d_conv, _ = _dims(cfg)
+    return {"h": (batch, d_in, n), "conv": (batch, d_conv - 1, d_in)}
+
+
+def mamba_decode_step(p: Dict, x: jax.Array, h: jax.Array, conv: jax.Array,
+                      cfg: ArchConfig, rules: AxisRules
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One token. x: (B, 1, D); h: (B, d_in, N) f32; conv: (B, d_conv-1, d_in).
+    Returns (out (B,1,D), h', conv')."""
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])[:, 0]
+    xi, z = jnp.split(xz, 2, axis=-1)                    # (B, d_in)
+    d_conv = p["conv_w"].shape[0]
+    # ring-buffer free: conv holds the last d_conv-1 raw inputs in order
+    window = jnp.concatenate([conv, xi[:, None]], axis=1)  # (B, d_conv, d_in)
+    xc = jnp.einsum("bki,ki->bi", window, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    dt, bm, cm = _ssm_inputs(p, xc, cfg)                 # (B,d_in),(B,N),(B,N)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    abar = jnp.exp(dt[..., None] * a)                    # (B, d_in, N)
+    bx = (dt * xc.astype(jnp.float32))[..., None] * bm[:, None, :]
+    h = abar * h + bx
+    y = jnp.einsum("bin,bn->bi", h, cm)
+    y = y + p["d_skip"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bi,id->bd", y, p["out_proj"])[:, None]
+    conv = window[:, 1:]
+    return constrain(out, rules, P(batch_axes(rules), None, None)), h, conv

@@ -1,0 +1,88 @@
+"""Single-source param declaration: shapes, shardings, and initializers.
+
+Every parameter is declared once as a :class:`ParamDesc`; the same tree of
+descriptors yields (a) real initialized arrays for CPU smoke tests,
+(b) ``jax.ShapeDtypeStruct`` stand-ins for the multi-pod dry-run, and
+(c) ``PartitionSpec`` trees for pjit in/out shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Tree = Any
+
+
+@dataclasses.dataclass
+class ParamDesc:
+    shape: Tuple[int, ...]
+    pspec: P
+    init: str = "normal"     # normal | zeros | ones | scaled | conv | a_log | dt_bias
+    scale: float = 1.0       # fan-in handled by "scaled"
+
+    def stack(self, g: int) -> "ParamDesc":
+        return ParamDesc((g,) + self.shape, P(*((None,) + tuple(self.pspec))),
+                         self.init, self.scale)
+
+
+def _materialize(desc: ParamDesc, key: jax.Array, dtype) -> jax.Array:
+    s = desc.shape
+    if desc.init == "zeros":
+        return jnp.zeros(s, dtype)
+    if desc.init == "ones":
+        return jnp.ones(s, dtype)
+    if desc.init == "a_log":
+        # mamba: A = -exp(A_log); init A_log = log(arange(1, N+1)) broadcast
+        n = s[-1]
+        a = jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))
+        return jnp.broadcast_to(a, s).astype(dtype)
+    if desc.init == "dt_bias":
+        # mamba dt bias: inverse-softplus of uniform in [1e-3, 1e-1]
+        u = jax.random.uniform(key, s, jnp.float32, 1e-3, 1e-1)
+        return jnp.log(jnp.expm1(u)).astype(dtype)
+    if desc.init in ("normal", "scaled", "conv"):
+        fan_in = s[-2] if len(s) >= 2 else s[-1]
+        if desc.init == "conv":
+            fan_in = s[0]
+        std = desc.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, s, jnp.float32) * std).astype(dtype)
+    raise ValueError(desc.init)
+
+
+def _is_desc(x) -> bool:
+    return isinstance(x, ParamDesc)
+
+
+def init_params(tree: Tree, rng: jax.Array, dtype=jnp.float32) -> Tree:
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_desc)
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_materialize(d, k, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def param_shapes(tree: Tree, dtype=jnp.bfloat16) -> Tree:
+    return jax.tree.map(lambda d: jax.ShapeDtypeStruct(d.shape, dtype), tree,
+                        is_leaf=_is_desc)
+
+
+def param_pspecs(tree: Tree) -> Tree:
+    return jax.tree.map(lambda d: d.pspec, tree, is_leaf=_is_desc)
+
+
+def count_params(tree: Tree) -> int:
+    return sum(int(math.prod(d.shape))
+               for d in jax.tree.leaves(tree, is_leaf=_is_desc))
+
+
+def param_bytes(tree: Tree, bytes_per: int = 2) -> int:
+    return count_params(tree) * bytes_per
+
+
+def stack_tree(tree: Tree, g: int) -> Tree:
+    """Add a leading group dimension of size g to every descriptor."""
+    return jax.tree.map(lambda d: d.stack(g), tree, is_leaf=_is_desc)

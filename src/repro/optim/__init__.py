@@ -1,0 +1,4 @@
+from repro.optim.adam import (Adam, AdamState, Sgd, apply_updates,
+                              clip_by_global_norm)
+from repro.optim.schedules import (constant, cosine_decay, exponential_decay,
+                                   warmup_cosine)

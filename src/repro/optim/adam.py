@@ -1,0 +1,101 @@
+"""Minimal pure-JAX optimizers (no optax in this environment).
+
+Optimizer state is a pytree mirroring the params (per-leaf m/v in f32), so
+the same PartitionSpecs used for params shard the optimizer state (ZeRO-style
+when FSDP specs are active).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+Schedule = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: Tree
+    v: Tree
+
+
+def _lr_at(lr: Schedule, step: jax.Array) -> jax.Array:
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    lr: Schedule = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: Optional[float] = None
+
+    def init(self, params: Tree) -> AdamState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(jnp.zeros((), jnp.int32),
+                         jax.tree.map(zeros, params),
+                         jax.tree.map(zeros, params))
+
+    def update(self, grads: Tree, state: AdamState, params: Tree
+               ) -> Tuple[Tree, AdamState]:
+        if self.grad_clip is not None:
+            grads = clip_by_global_norm(grads, self.grad_clip)
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        f32 = lambda g: g.astype(jnp.float32)
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * f32(g),
+                         state.m, grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * jnp.square(f32(g)),
+                         state.v, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = _lr_at(self.lr, step)
+
+        def upd(mm, vv, p):
+            u = (mm / bc1) / (jnp.sqrt(vv / bc2) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, AdamState(step, m, v)
+
+
+@dataclasses.dataclass(frozen=True)
+class Sgd:
+    lr: Schedule = 1e-2
+    momentum: float = 0.0
+
+    def init(self, params: Tree) -> AdamState:
+        z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamState(jnp.zeros((), jnp.int32), z, z)
+
+    def update(self, grads, state, params):
+        step = state.step + 1
+        lr = _lr_at(self.lr, step)
+        if self.momentum:
+            m = jax.tree.map(lambda mm, g: self.momentum * mm
+                             + g.astype(jnp.float32), state.m, grads)
+            upd = jax.tree.map(lambda mm, p: (-lr * mm).astype(p.dtype), m, params)
+            return upd, AdamState(step, m, state.v)
+        upd = jax.tree.map(lambda g, p: (-lr * g.astype(jnp.float32)).astype(p.dtype),
+                           grads, params)
+        return upd, AdamState(step, state.m, state.v)
+
+
+def apply_updates(params: Tree, updates: Tree) -> Tree:
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def clip_by_global_norm(grads: Tree, max_norm: float) -> Tree:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads)

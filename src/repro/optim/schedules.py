@@ -1,0 +1,32 @@
+"""Learning-rate schedules as step -> lr callables."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def exponential_decay(lr: float, decay: float, every: int):
+    def f(step):
+        return lr * decay ** (step.astype(jnp.float32) / every)
+    return f
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        c = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * c)
+    return f
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int,
+                  final_frac: float = 0.05):
+    cos = cosine_decay(lr, max(total_steps - warmup, 1), final_frac)
+    def f(step):
+        s = step.astype(jnp.float32)
+        w = jnp.minimum(s / max(warmup, 1), 1.0)
+        return jnp.where(s < warmup, lr * s / max(warmup, 1), w * cos(step - warmup))
+    return f

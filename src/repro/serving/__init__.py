@@ -1,0 +1,2 @@
+from repro.serving.steps import (make_train_step, make_prefill_step,
+                                 make_serve_step, lm_loss)

@@ -1,0 +1,95 @@
+"""Step functions: train / prefill / serve(decode) for any architecture.
+
+These are the units the launcher jits with explicit in/out shardings and the
+dry-run lowers against ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim.adam import Adam, AdamState, apply_updates
+
+Tree = Any
+
+
+def lm_loss(logits: jax.Array, labels: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Next-token cross entropy.  labels: (B, S) int32, -1 = ignore.
+    logits: (B, S, V) — logits[:, t] predicts labels[:, t]."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, jnp.maximum(labels, 0)[..., None],
+                             axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (lse - ll) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return nll.sum() / denom, denom
+
+
+def _model_inputs(batch: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    kw = {}
+    if "patches" in batch:
+        kw["patches"] = batch["patches"]
+    if "frames" in batch:
+        kw["frames"] = batch["frames"]
+    return kw
+
+
+def _full_labels(model: Model, batch: Dict[str, jax.Array]) -> jax.Array:
+    """Align labels with model output (prepend ignore for vision prefix)."""
+    labels = batch["labels"]
+    if model.cfg.vision is not None and "patches" in batch:
+        p = batch["patches"].shape[1]
+        pre = jnp.full((labels.shape[0], p), -1, labels.dtype)
+        labels = jnp.concatenate([pre, labels], axis=1)
+    return labels
+
+
+def make_train_step(model: Model, optimizer: Adam, aux_weight: float = 0.01):
+    def loss_fn(params, batch):
+        logits, aux, _ = model.forward(params, batch["tokens"],
+                                       **_model_inputs(batch))
+        loss, denom = lm_loss(logits, _full_labels(model, batch))
+        total = loss + aux_weight * aux
+        return total, {"loss": loss, "moe_aux": aux, "tokens": denom}
+
+    def train_step(params: Tree, opt_state: AdamState, batch: Dict
+                   ) -> Tuple[Tree, AdamState, Dict]:
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, cache_len: Optional[int] = None):
+    def prefill_step(params: Tree, batch: Dict) -> Tuple[jax.Array, Tree]:
+        logits, _, cache = model.forward(
+            params, batch["tokens"], return_cache=True, cache_len=cache_len,
+            last_logit_only=True, **_model_inputs(batch))
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_serve_step(model: Model, *, greedy: bool = True,
+                    temperature: float = 1.0):
+    """One decode step: cache + current token -> next token + cache."""
+    def serve_step(params: Tree, cache: Tree, batch: Dict
+                   ) -> Tuple[Dict, Tree]:
+        logits, cache = model.decode_step(params, cache, batch["tokens"])
+        if greedy:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            key = jax.random.fold_in(jax.random.PRNGKey(0), cache["pos"][0])
+            nxt = jax.random.categorical(key, logits / temperature
+                                         ).astype(jnp.int32)
+        return {"next_token": nxt, "logits": logits}, cache
+
+    return serve_step

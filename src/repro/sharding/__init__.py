@@ -1,0 +1,2 @@
+from repro.sharding.specs import (AxisRules, shard_axis, constrain,
+                                  batch_axes, DEFAULT_RULES)

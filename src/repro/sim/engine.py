@@ -1,0 +1,252 @@
+"""Slotted discrete-event engine (480 slots x 45 s by default, §VI-A).
+
+Response time = queue wait + switch overhead + compute + network (paper's
+T_completion decomposition); power is billed per region at its electricity
+price; switching is tracked both as the Frobenius allocation difference
+(the paper's theoretical C_switch) and as operational overhead (actual
+model-switch/migration/activation seconds — Fig 9's second panel).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Protocol, Tuple
+
+import numpy as np
+
+from repro.sim.cluster import (COLD_START_S, MIGRATION_S, SWITCH_POWER_FRAC,
+                               Cluster, Region, Server)
+from repro.sim.metrics import MetricsAggregator
+from repro.sim.topology import Topology
+from repro.sim.workload import Task, Workload
+
+
+@dataclasses.dataclass
+class SlotObs:
+    t: int
+    latency: np.ndarray              # (R, R) ms
+    capacities: np.ndarray           # (R,) active tasks/slot
+    total_capacities: np.ndarray     # (R,) incl. inactive
+    queue_s: np.ndarray              # (R,) backlog seconds
+    queue_tasks: np.ndarray          # (R,) queued task counts (proxy)
+    utilization: np.ndarray          # (R,)
+    power_prices: np.ndarray         # (R,)
+    prev_alloc: np.ndarray           # (R, R)
+    arrivals_history: np.ndarray     # (t, R) realized arrivals so far
+    cluster: Cluster                 # full server-level visibility
+    slot_seconds: float
+
+
+@dataclasses.dataclass
+class SlotDecision:
+    # task.id -> (region, server index within region); None = buffer
+    assignments: Dict[int, Optional[Tuple[int, int]]]
+    # optional per-region target active-server counts (micro layer Eq 6)
+    activation: Optional[Dict[int, int]] = None
+
+
+class Scheduler(Protocol):
+    name: str
+
+    def schedule(self, obs: SlotObs, tasks: List[Task]) -> SlotDecision: ...
+
+    def reset(self) -> None: ...
+
+
+@dataclasses.dataclass
+class FailureEvent:
+    region: int
+    start_slot: int
+    duration: int
+
+
+class Engine:
+    def __init__(self, topology: Topology, cluster: Cluster,
+                 workload: Workload, scheduler, *,
+                 slot_seconds: float = 45.0,
+                 drop_after_slots: float = 12.0,
+                 failures: Optional[List[FailureEvent]] = None,
+                 seed: int = 0):
+        self.topo = topology
+        self.cluster = cluster
+        self.workload = workload
+        self.scheduler = scheduler
+        self.slot_s = slot_seconds
+        self.drop_after = drop_after_slots
+        self.failures = failures or []
+        self.rng = np.random.default_rng(seed)
+        self.metrics = MetricsAggregator(slot_seconds=slot_seconds)
+        r = cluster.n_regions
+        self.prev_alloc = np.full((r, r), 1.0 / r)
+        self.arrivals_hist: List[np.ndarray] = []
+        self.buffers: List[List[Task]] = [[] for _ in range(r)]
+        self._failed: Dict[int, int] = {}   # region -> slots remaining
+
+    # ------------------------------------------------------------------
+
+    def _obs(self, t: int) -> SlotObs:
+        c = self.cluster
+        r = c.n_regions
+        q_s = np.array([sum(s.queue_s for s in reg.active_servers())
+                        for reg in c.regions])
+        q_n = np.array([len(self.buffers[i]) for i in range(r)]) + \
+            q_s / np.maximum(self.slot_s, 1.0)
+        hist = (np.stack(self.arrivals_hist) if self.arrivals_hist
+                else np.zeros((0, r)))
+        return SlotObs(
+            t=t, latency=self.topo.latency, capacities=c.capacities(),
+            total_capacities=np.array([reg.total_capacity for reg in c.regions]),
+            queue_s=q_s, queue_tasks=q_n, utilization=c.utilizations(),
+            power_prices=c.power_prices(), prev_alloc=self.prev_alloc,
+            arrivals_history=hist, cluster=c, slot_seconds=self.slot_s)
+
+    def _apply_activation(self, targets: Dict[int, int]) -> float:
+        """Activate/deactivate servers toward targets; returns activation
+        overhead seconds (cold starts initiated this slot)."""
+        overhead = 0.0
+        for ridx, n_target in targets.items():
+            reg = self.cluster.regions[ridx]
+            if ridx in self._failed:
+                continue
+            n_target = int(np.clip(n_target, 1, len(reg.servers)))
+            active = [s for s in reg.servers if s.state == "active"]
+            off = [s for s in reg.servers if s.state == "off"]
+            warming = [s for s in reg.servers if s.state == "warming"]
+            n_now = len(active) + len(warming)
+            if n_target > n_now:
+                # wake best idle servers first (shortest cold start)
+                for s in off[:n_target - n_now]:
+                    s.state = "warming"
+                    s.warm_remaining_s = COLD_START_S
+                    overhead += COLD_START_S
+            elif n_target < len(active):
+                # deactivate lowest-utilization, longest-idle servers
+                idle_sorted = sorted(active,
+                                     key=lambda s: (s.util, -s.idle_slots))
+                for s in idle_sorted[:len(active) - n_target]:
+                    if s.queue_s <= 0:
+                        s.state = "off"
+                        s.util = 0.0
+        return overhead
+
+    def _step_failures(self, t: int) -> None:
+        for ev in self.failures:
+            if ev.start_slot == t:
+                self._failed[ev.region] = ev.duration
+                for s in self.cluster.regions[ev.region].servers:
+                    s.state = "off"
+                    s.queue_s = 0.0
+        done = []
+        for ridx in self._failed:
+            self._failed[ridx] -= 1
+            if self._failed[ridx] <= 0:
+                done.append(ridx)
+                for s in self.cluster.regions[ridx].servers:
+                    s.state = "active"
+        for ridx in done:
+            del self._failed[ridx]
+
+    # ------------------------------------------------------------------
+
+    def run(self, n_slots: Optional[int] = None) -> MetricsAggregator:
+        t_total = n_slots or self.workload.n_slots
+        if hasattr(self.scheduler, "reset"):
+            self.scheduler.reset()
+        for t in range(t_total):
+            self._step_failures(t)
+            # warming servers progress
+            for reg in self.cluster.regions:
+                for s in reg.servers:
+                    if s.state == "warming":
+                        s.warm_remaining_s -= self.slot_s
+                        if s.warm_remaining_s <= 0:
+                            s.state = "active"
+                            s.warm_remaining_s = 0.0
+
+            arrivals = list(self.workload.tasks[t]) if t < len(self.workload.tasks) else []
+            r = self.cluster.n_regions
+            arr_vec = np.zeros(r)
+            for task in arrivals:
+                arr_vec[task.origin] += 1
+            self.arrivals_hist.append(arr_vec)
+            # buffered tasks get first chance
+            tasks = [tk for b in self.buffers for tk in b] + arrivals
+            for b in self.buffers:
+                b.clear()
+
+            obs = self._obs(t)
+            decision = self.scheduler.schedule(obs, tasks)
+            overhead_s = 0.0
+            if decision.activation:
+                overhead_s += self._apply_activation(decision.activation)
+
+            alloc = np.zeros((r, r))
+            switch_energy_j = 0.0
+            n_switches = 0
+            for task in tasks:
+                tgt = decision.assignments.get(task.id)
+                if tgt is None:
+                    if t - task.arrival_slot >= self.drop_after:
+                        self.metrics.record_drop(task, t)
+                    else:
+                        self.buffers[task.origin].append(task)
+                    continue
+                ridx, sidx = tgt
+                reg = self.cluster.regions[ridx]
+                if ridx in self._failed or not reg.servers:
+                    self.buffers[task.origin].append(task)
+                    continue
+                sidx = int(np.clip(sidx, 0, len(reg.servers) - 1))
+                srv = reg.servers[sidx]
+                if srv.state != "active":
+                    cand = reg.active_servers()
+                    if not cand:
+                        self.buffers[task.origin].append(task)
+                        continue
+                    srv = min(cand, key=lambda s: s.queue_s)
+                speed = max(srv.tflops / 112.0, 0.1)     # V100 reference
+                switch_s = srv.switch_cost_s(task.model)
+                if switch_s > 0:
+                    n_switches += 1
+                    switch_energy_j += switch_s * srv.power_w * SWITCH_POWER_FRAC
+                    overhead_s += switch_s
+                srv.note_model(task.model)
+                work_s = task.work_s / speed
+                wait_s = srv.queue_s + switch_s
+                net_s = self.topo.latency[task.origin, ridx] / 1000.0
+                srv.queue_s += switch_s + work_s
+                self.metrics.record_completion(
+                    task, t, wait_s=wait_s, work_s=work_s, net_s=net_s)
+                alloc[task.origin, ridx] += 1
+
+            # allocation matrix + theoretical switching cost
+            row = alloc.sum(1, keepdims=True)
+            alloc_n = np.where(row > 0, alloc / np.maximum(row, 1e-9),
+                               self.prev_alloc)
+            switch_cost_f = float(np.sum((alloc_n - self.prev_alloc) ** 2))
+            self.prev_alloc = alloc_n
+
+            # drain queues + power accounting
+            utils = []
+            for reg in self.cluster.regions:
+                for s in reg.servers:
+                    if s.state != "active":
+                        continue
+                    busy = min(s.queue_s, self.slot_s)
+                    s.util = busy / self.slot_s
+                    s.idle_slots = 0 if s.util > 0.05 else s.idle_slots + 1
+                    s.queue_s = max(0.0, s.queue_s - self.slot_s)
+                    utils.append(s.util)
+            # bill at regional prices
+            cost = 0.0
+            for reg in self.cluster.regions:
+                reg_j = sum((0.1 + 0.9 * s.util) * s.power_w * self.slot_s
+                            for s in reg.servers if s.state == "active")
+                cost += reg_j / 3.6e6 * reg.power_price
+            cost += switch_energy_j / 3.6e6 * float(np.mean(self.cluster.power_prices()))
+
+            self.metrics.record_slot(
+                t, utils=np.array(utils) if utils else np.zeros(1),
+                power_cost=cost, switch_cost=switch_cost_f,
+                overhead_s=overhead_s, n_switches=n_switches,
+                queue_tasks=float(obs.queue_tasks.sum()))
+        return self.metrics

@@ -1,0 +1,96 @@
+"""Evaluation metrics (paper §VI-B): response time, load balance (Eq 11),
+total cost, prediction accuracy (Eq 12)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+def load_balance_coefficient(utils: np.ndarray) -> float:
+    """Eq 11: LB = 1 / (1 + CV) over active-server utilizations."""
+    if utils.size == 0:
+        return 1.0
+    mean = float(np.mean(utils))
+    if mean <= 1e-9:
+        return 1.0
+    cv = float(np.std(utils)) / mean
+    return 1.0 / (1.0 + cv)
+
+
+def prediction_accuracy(pred: np.ndarray, actual: np.ndarray,
+                        eps: float = 1e-6) -> float:
+    """Eq 12: PA = exp(-mean_t |F_pred - F_actual| / (F_actual + eps))."""
+    rel = np.abs(pred - actual) / (np.abs(actual) + eps)
+    return float(np.exp(-np.mean(rel)))
+
+
+@dataclasses.dataclass
+class MetricsAggregator:
+    slot_seconds: float = 45.0
+
+    def __post_init__(self):
+        self.response_times: List[float] = []
+        self.wait_times: List[float] = []
+        self.work_times: List[float] = []
+        self.net_times: List[float] = []
+        self.queue_by_slot: List[float] = []
+        self.lb_by_slot: List[float] = []
+        self.power_cost_by_slot: List[float] = []
+        self.switch_cost_by_slot: List[float] = []
+        self.overhead_by_slot: List[float] = []
+        self.switch_count_by_slot: List[int] = []
+        self.completed = 0
+        self.dropped = 0
+        self.completion_slots: List[int] = []
+
+    # ---- per-event ----
+
+    def record_completion(self, task, t: int, *, wait_s: float, work_s: float,
+                          net_s: float) -> None:
+        self.completed += 1
+        self.response_times.append(wait_s + work_s + net_s)
+        self.wait_times.append(wait_s)
+        self.work_times.append(work_s)
+        self.net_times.append(net_s)
+        self.completion_slots.append(t)
+
+    def record_drop(self, task, t: int) -> None:
+        self.dropped += 1
+
+    def record_slot(self, t: int, *, utils: np.ndarray, power_cost: float,
+                    switch_cost: float, overhead_s: float, n_switches: int,
+                    queue_tasks: float) -> None:
+        self.lb_by_slot.append(load_balance_coefficient(utils))
+        self.power_cost_by_slot.append(power_cost)
+        self.switch_cost_by_slot.append(switch_cost)
+        self.overhead_by_slot.append(overhead_s)
+        self.switch_count_by_slot.append(n_switches)
+        self.queue_by_slot.append(queue_tasks)
+
+    # ---- summaries ----
+
+    def summary(self) -> Dict[str, float]:
+        rt = np.array(self.response_times) if self.response_times else np.zeros(1)
+        return {
+            "mean_response_s": float(rt.mean()),
+            "p50_response_s": float(np.percentile(rt, 50)),
+            "p95_response_s": float(np.percentile(rt, 95)),
+            "p99_response_s": float(np.percentile(rt, 99)),
+            "mean_wait_s": float(np.mean(self.wait_times)) if self.wait_times else 0.0,
+            "mean_work_s": float(np.mean(self.work_times)) if self.work_times else 0.0,
+            "mean_net_s": float(np.mean(self.net_times)) if self.net_times else 0.0,
+            "load_balance": float(np.mean(self.lb_by_slot)) if self.lb_by_slot else 1.0,
+            "power_cost_total": float(np.sum(self.power_cost_by_slot)),
+            "switch_cost_total": float(np.sum(self.switch_cost_by_slot)),
+            "operational_overhead": float(np.sum(self.overhead_by_slot))
+            / max(len(self.overhead_by_slot), 1) / self.slot_seconds,
+            "model_switches": int(np.sum(self.switch_count_by_slot)),
+            "completed": self.completed,
+            "dropped": self.dropped,
+            "completion_rate": self.completed
+            / max(self.completed + self.dropped, 1),
+            "mean_queue_tasks": float(np.mean(self.queue_by_slot))
+            if self.queue_by_slot else 0.0,
+        }

@@ -1,0 +1,21 @@
+import copy
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_world():
+    """Shared tiny topology/cluster/workload for scheduler tests."""
+    from repro.sim import make_topology, make_cluster, make_workload
+    from repro.sim.cluster import throughput_per_slot
+    topo = make_topology("abilene", seed=1)
+    cluster = make_cluster(topo.n_regions, seed=3)
+    rate = 0.3 * throughput_per_slot(cluster) / topo.n_regions
+    wl = make_workload(30, topo.n_regions, seed=2, base_rate=rate)
+    return topo, cluster, wl
+
+
+@pytest.fixture()
+def fresh_cluster(small_world):
+    return copy.deepcopy(small_world[1])

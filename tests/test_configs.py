@@ -1,0 +1,86 @@
+"""Config registry: all 10 assigned architectures, exact dims, param counts
+against published sizes."""
+import pytest
+
+from repro.configs import (ARCH_IDS, SHAPES, active_param_count, get_config,
+                           list_archs, param_count, reduced,
+                           with_sliding_window_variant)
+
+# published total / active param counts (1e9), ±12% tolerance
+PUBLISHED = {
+    "mixtral-8x7b": (46.7, 12.9),
+    "whisper-small": (0.24, 0.24),
+    "falcon-mamba-7b": (7.3, 7.3),
+    "llama3-8b": (8.0, 8.0),
+    "qwen3-moe-235b-a22b": (235.0, 22.0),
+    "paligemma-3b": (2.9, 2.9),
+    "tinyllama-1.1b": (1.1, 1.1),
+    "jamba-v0.1-52b": (52.0, 12.0),
+}
+
+
+def test_all_archs_listed():
+    assert len(list_archs()) == 10
+    assert len(SHAPES) == 4
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_config_loads(arch):
+    cfg = get_config(arch)
+    assert cfg.name == arch
+    assert cfg.num_layers > 0 and cfg.d_model > 0 and cfg.vocab > 0
+    assert cfg.source
+
+
+@pytest.mark.parametrize("arch,expected", sorted(PUBLISHED.items()))
+def test_param_counts_match_published(arch, expected):
+    cfg = get_config(arch)
+    total, active = expected
+    assert param_count(cfg) == pytest.approx(total * 1e9, rel=0.20)
+    assert active_param_count(cfg) == pytest.approx(active * 1e9, rel=0.20)
+
+
+def test_assigned_dims_exact():
+    m = get_config("mixtral-8x7b")
+    assert (m.num_layers, m.d_model, m.num_heads, m.num_kv_heads) == (32, 4096, 32, 8)
+    assert m.moe.num_experts == 8 and m.moe.top_k == 2
+    assert m.sliding_window == 4096
+    q = get_config("qwen3-moe-235b-a22b")
+    assert q.num_layers == 94 and q.moe.num_experts == 128 and q.moe.top_k == 8
+    g = get_config("granite-20b")
+    assert g.num_kv_heads == 1 and g.d_model == 6144 and g.num_layers == 52
+    j = get_config("jamba-v0.1-52b")
+    assert j.layer_period.count("attn") == 1 and j.layer_period.count("mamba") == 7
+    f = get_config("falcon-mamba-7b")
+    assert f.is_attention_free and f.ssm.d_state == 16
+    w = get_config("whisper-small")
+    assert w.encoder is not None and w.encoder.num_layers == 12
+    p = get_config("paligemma-3b")
+    assert p.vision is not None and p.vocab == 257216
+    q25 = get_config("qwen2.5-3b")
+    assert q25.qkv_bias
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_is_small(arch):
+    r = reduced(get_config(arch))
+    assert r.d_model <= 512
+    assert r.num_layers <= 8
+    if r.moe:
+        assert r.moe.num_experts <= 4
+
+
+def test_swa_variant():
+    cfg = get_config("llama3-8b")
+    assert not cfg.subquadratic
+    v = with_sliding_window_variant(cfg)
+    assert v.subquadratic and v.sliding_window == 4096
+    # mixtral already subquadratic: unchanged
+    m = get_config("mixtral-8x7b")
+    assert with_sliding_window_variant(m) is m
+
+
+def test_shapes_registry():
+    assert SHAPES["train_4k"].mode == "train"
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["decode_32k"].global_batch == 128

@@ -1,0 +1,117 @@
+"""Demand predictor, PPO machinery, macro env dynamics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.env import (EnvParams, env_obs, env_reset, env_step,
+                            make_env_params, obs_dim)
+from repro.core import policy as pol
+from repro.core.ppo import PPOTrainer, collect_rollout
+from repro.core.predictor import (EmaPredictor, PredictorTrainer, make_dataset,
+                                  predict)
+from repro.sim.metrics import prediction_accuracy
+
+
+def _env(r=5, t=24, seed=0):
+    rng = np.random.default_rng(seed)
+    traffic = 40 + 25 * np.sin(np.linspace(0, 4 * np.pi, t))[:, None] \
+        * rng.random((1, r)) + 5 * rng.random((t, r))
+    traffic = np.maximum(traffic, 1.0)
+    cap = rng.uniform(30, 90, r)
+    power = rng.uniform(0.5, 2.0, r)
+    lat = rng.uniform(5, 60, (r, r))
+    np.fill_diagonal(lat, 1.0)
+    return make_env_params(cap, power, lat, traffic), r, t
+
+
+def test_env_step_conserves_mass():
+    params, r, t = _env()
+    state = env_reset(params, jax.random.PRNGKey(0))
+    a = jnp.full((r, r), 1.0 / r)
+    arrivals = float(params.traffic[0].sum())
+    new, reward, info = env_step(params, state, a)
+    served_plus_q = float(new.q.sum()) + float(
+        jnp.minimum(state.q + (params.traffic[0][:, None] * a).sum(0),
+                    params.capacity).sum())
+    assert served_plus_q == pytest.approx(arrivals, rel=1e-5)
+    assert float(reward) < 0.0
+    assert info["switch"] >= 0.0
+
+
+def test_env_obs_shape():
+    params, r, _ = _env()
+    state = env_reset(params, jax.random.PRNGKey(0))
+    obs = env_obs(params, state)
+    assert obs.shape == (obs_dim(r),)
+
+
+def test_policy_outputs_valid_actions():
+    r = 5
+    params = pol.init_policy(jax.random.PRNGKey(0), obs_dim(r), r)
+    obs = jnp.zeros((obs_dim(r),))
+    out = pol.sample_action(params, obs, jax.random.PRNGKey(1), r)
+    a = out["action"]
+    np.testing.assert_allclose(np.asarray(a.sum(-1)), np.ones(r), atol=1e-5)
+    assert np.all(np.asarray(a) >= 0)
+    assert np.isfinite(float(out["log_prob"]))
+    m = pol.mean_action(params, obs, r)
+    np.testing.assert_allclose(np.asarray(m.sum(-1)), np.ones(r), atol=1e-5)
+
+
+def test_beta_log_prob_matches_scipy():
+    from scipy.stats import beta as sp_beta
+    a, b, x = 2.3, 1.7, 0.4
+    got = float(pol.beta_log_prob(jnp.asarray(a), jnp.asarray(b),
+                                  jnp.asarray(x)))
+    assert got == pytest.approx(sp_beta.logpdf(x, a, b), rel=1e-5)
+
+
+def test_rollout_shapes_and_gae():
+    params_env, r, t = _env()
+    params = pol.init_policy(jax.random.PRNGKey(0), obs_dim(r), r)
+    ro = collect_rollout(params, params_env, jax.random.PRNGKey(1),
+                         4, 8, r)
+    assert ro.obs.shape == (4, 8, obs_dim(r))
+    assert ro.actions.shape == (4, 8, r, r)
+    assert np.isfinite(np.asarray(ro.adv)).all()
+    assert abs(float(ro.adv.mean())) < 1e-5   # normalized
+
+
+def test_ppo_update_runs_and_improves_smoothness():
+    params_env, r, t = _env()
+    tr = PPOTrainer(params_env, r, n_envs=8, n_steps=t - 1, seed=0,
+                    lr=1e-3)
+    hist = tr.train(8)
+    assert len(hist) == 8
+    # the OT-supervision signal should pull the policy toward P*:
+    assert hist[-1]["ot_dev"] < hist[0]["ot_dev"] + 0.05
+    assert np.isfinite(hist[-1]["reward"])
+
+
+def test_predictor_learns_and_beats_ema():
+    rng = np.random.default_rng(0)
+    t, r = 400, 6
+    base = rng.random(r) + 0.2
+    tt = np.arange(t)[:, None]
+    arrivals = base[None, :] * (1.2 + np.sin(2 * np.pi * tt / 48
+                                             + np.arange(r)[None, :]))
+    arrivals = np.maximum(arrivals, 0.05) * 30
+    util = np.clip(arrivals / arrivals.max(), 0, 1)
+    queue = rng.random((t, r))
+    hist, target = make_dataset(arrivals, util, queue)
+    n_train = int(0.8 * len(hist))
+    trainer = PredictorTrainer(r, seed=0)
+    trainer.fit(hist[:n_train], target[:n_train], epochs=40)
+    pred = trainer(hist[n_train:])
+    ema = EmaPredictor(r, alpha=0.5)
+    ema_preds = []
+    h_dist = arrivals / arrivals.sum(1, keepdims=True)
+    for i in range(n_train, n_train + len(pred)):
+        ema.update(arrivals[i])
+        ema_preds.append(ema.predict())
+    ema_preds = np.array(ema_preds)
+    pa_nn = prediction_accuracy(pred, target[n_train:])
+    pa_ema = prediction_accuracy(ema_preds, target[n_train:])
+    assert pa_nn > 0.5, f"NN predictor accuracy too low: {pa_nn}"
+    assert pa_nn >= pa_ema - 0.02, (pa_nn, pa_ema)

@@ -1,0 +1,228 @@
+"""Distribution layer: mesh construction + sharded lowering (subprocess with
+fake host devices so the main pytest process keeps its single CPU device),
+HLO collective parsing, roofline math, serving loop integration."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import parse_collectives, shape_bytes
+from repro.launch.roofline import Roofline, analytic_costs, model_flops
+from repro.configs import SHAPES, get_config
+
+
+def test_shape_bytes():
+    assert shape_bytes("bf16[128,256]") == 128 * 256 * 2
+    assert shape_bytes("f32[4]{0}") == 16
+    assert shape_bytes("(bf16[8,8], f32[2])") == 128 + 8
+    assert shape_bytes("pred[]") == 1      # scalar = one element
+
+
+SYNTHETIC_HLO = textwrap.dedent("""\
+    HloModule test, is_scheduled=true
+    %cond_a (p0: (s32[], f32[8])) -> pred[] {
+      %p0 = (s32[], f32[8]) parameter(0)
+      %c = s32[] constant(10)
+      %gte = s32[] get-tuple-element(%p0), index=0
+      ROOT %cmp = pred[] compare(%gte, %c), direction=LT
+    }
+    %body_a (p1: (s32[], f32[8])) -> (s32[], f32[8]) {
+      %p1 = (s32[], f32[8]) parameter(0)
+      %gte2 = f32[8] get-tuple-element(%p1), index=1
+      %ar = f32[8]{0} all-reduce(%gte2), replica_groups={{0,1,2,3}}, to_apply=%add
+      ROOT %t = (s32[], f32[8]) tuple(%gte2, %ar)
+    }
+    ENTRY %main (a: f32[8]) -> f32[8] {
+      %a = f32[8] parameter(0)
+      %ag = f32[16]{0} all-gather(%a), replica_groups={{0,1}}, dimensions={0}
+      %w = (s32[], f32[8]) while(%init), condition=%cond_a, body=%body_a
+      ROOT %r = f32[8] get-tuple-element(%w), index=1
+    }
+""")
+
+
+def test_parse_collectives_trip_counts():
+    out = parse_collectives(SYNTHETIC_HLO, default_group=4)
+    # all-gather once at entry: result 64 bytes * (1/2) = 32 link bytes
+    ag = out["per_op"]["all-gather"]
+    assert ag["count"] == 1
+    assert ag["link_bytes"] == pytest.approx(64 * 0.5)
+    # all-reduce inside while body x 10 trips: 2 * 32 * (3/4) * 10
+    ar = out["per_op"]["all-reduce"]
+    assert ar["count"] == 10
+    assert ar["link_bytes"] == pytest.approx(2 * 32 * 0.75 * 10)
+
+
+def test_roofline_terms():
+    cfg = get_config("llama3-8b")
+    shape = SHAPES["train_4k"]
+    ac = analytic_costs(cfg, shape, 256, 16)
+    # 6*N*D within 2x of the linear term (attention adds on top)
+    assert ac["flops_total"] == pytest.approx(
+        6 * 8.03e9 * 256 * 4096, rel=0.5)
+    assert ac["bytes_per_device"] > 0
+    mf = model_flops(cfg, shape)
+    assert mf == pytest.approx(6 * 8.03e9 * 256 * 4096, rel=0.05)
+    r = Roofline(arch="x", shape="train_4k", mesh="single", chips=256,
+                 flops_per_device=197e12, bytes_per_device=819e9,
+                 collective_bytes_per_device=25e9,
+                 model_flops=1.0).finalize()
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(1.0)
+    assert r.collective_s == pytest.approx(0.5)
+    assert r.bottleneck in ("compute", "memory")
+
+
+SUBPROCESS_PROG = textwrap.dedent("""\
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import get_config, reduced
+    from repro.models.model import Model
+    from repro.sharding.specs import AxisRules
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh(2, 4)
+    cfg = reduced(get_config("{arch}"), layers=2)
+    rules = AxisRules(mesh=mesh)
+    model = Model(cfg, rules)
+    ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                is_leaf=lambda x: isinstance(x, P))
+    p_sh = ns(model.pspecs())
+    p_sds = model.shapes(jnp.float32)
+
+    def fwd(params, tokens):
+        return model.forward(params, tokens)[0]
+
+    tok_sh = NamedSharding(mesh, P("data", None))
+    lowered = jax.jit(fwd, in_shardings=(p_sh, tok_sh)).lower(
+        p_sds, jax.ShapeDtypeStruct((4, 16), jnp.int32))
+    compiled = lowered.compile()
+    # also run numerically on the fake 8-device mesh vs single-device
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab)
+    sharded = jax.jit(fwd, in_shardings=(p_sh, tok_sh))(params, toks)
+    local = model.forward(params, toks)[0]
+    err = float(jnp.abs(sharded - local).max())
+    print(json.dumps({{"ok": True, "err": err}}))
+""")
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "mixtral-8x7b",
+                                  "falcon-mamba-7b"])
+def test_sharded_lowering_and_numerics(arch):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    prog = SUBPROCESS_PROG.format(arch=arch)
+    res = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out["ok"]
+    assert out["err"] < 5e-2, f"sharded vs local mismatch: {out['err']}"
+
+
+def test_production_mesh_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    prog = textwrap.dedent("""\
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        from repro.launch.mesh import make_production_mesh, mesh_chips
+        m1 = make_production_mesh()
+        assert m1.axis_names == ("data", "model") and mesh_chips(m1) == 256
+        m2 = make_production_mesh(multi_pod=True)
+        assert m2.axis_names == ("pod", "data", "model")
+        assert mesh_chips(m2) == 512
+        print("ok")
+    """)
+    res = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "ok" in res.stdout
+
+
+def test_serving_loop_end_to_end():
+    from repro.serving.serve_loop import Request, ServingCluster
+    cluster = ServingCluster(2, 2, ["tinyllama-1.1b", "qwen2.5-3b"],
+                             seed=0, cache_len=48)
+    rng = np.random.default_rng(0)
+    rid = 0
+
+    def router(req, regions):
+        best = None
+        for ri, region in enumerate(regions):
+            for pi, rep in enumerate(region):
+                if rep.current == req.model and rep.switch_remaining == 0 \
+                        and rep.has_free_slot():
+                    return (ri, pi)
+                if best is None and rep.current is None:
+                    best = (ri, pi)
+        return best
+
+    for t in range(40):
+        if t < 8:
+            m = ["tinyllama-1.1b", "qwen2.5-3b"][rid % 2]
+            cluster.submit(Request(id=rid, model=m,
+                                   prompt=rng.integers(0, 255, 12),
+                                   max_new=6))
+            rid += 1
+        cluster.run_tick(router)
+    s = cluster.stats()
+    assert s["completed"] == 8
+    assert s["model_switches"] <= 8
+    assert s["mean_latency_ticks"] >= 5
+
+
+SEQ_PAR_PROG = textwrap.dedent("""\
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import get_config, reduced
+    from repro.models.model import Model
+    from repro.sharding.specs import AxisRules
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh(2, 4)
+    cfg = reduced(get_config("granite-20b"), layers=2)
+    rules = AxisRules(mesh=mesh, seq_axis="model")
+    model = Model(cfg, rules, q_chunk=8, kv_chunk=8)
+    ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                is_leaf=lambda x: isinstance(x, P))
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab)
+
+    def fwd(p, t):
+        return model.forward(p, t)[0]
+
+    sharded = jax.jit(fwd, in_shardings=(ns(model.pspecs()),
+                                         NamedSharding(mesh, P("data", None))
+                                         ))(params, toks)
+    local_model = Model(cfg, AxisRules(), q_chunk=8, kv_chunk=8)
+    local = local_model.forward(params, toks)[0]
+    err = float(jnp.abs(sharded - local).max())
+    print(json.dumps({"ok": True, "err": err}))
+""")
+
+
+def test_sequence_parallel_numerics():
+    """The §Perf-C sequence-parallel attention path must match the local
+    model bit-for-bit (modulo float reassociation)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    res = subprocess.run([sys.executable, "-c", SEQ_PAR_PROG], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out["err"] < 5e-2, f"seq-parallel mismatch: {out['err']}"

@@ -1,0 +1,129 @@
+"""Pallas kernels vs their jnp oracles: shape/dtype sweeps, interpret=True."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.compat_score import compat_score, compat_score_ref
+from repro.kernels.flash_decode import flash_decode, flash_decode_ref
+from repro.kernels.selective_scan import selective_scan, selective_scan_ref
+from repro.kernels.sinkhorn import sinkhorn_batched, sinkhorn_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-4
+
+
+@pytest.mark.parametrize("b,kh,g,hd,c,bc", [
+    (2, 2, 4, 128, 64, 16),
+    (1, 1, 1, 64, 100, 32),     # padding path (100 % 32 != 0)
+    (3, 4, 2, 128, 256, 256),   # single block
+    (2, 8, 1, 128, 33, 8),      # MQA grouping
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode(b, kh, g, hd, c, bc, dtype):
+    q = jnp.asarray(RNG.standard_normal((b, kh, g, hd)), dtype)
+    k = jnp.asarray(RNG.standard_normal((b, c, kh, hd)), dtype)
+    v = jnp.asarray(RNG.standard_normal((b, c, kh, hd)), dtype)
+    valid = jnp.asarray(RNG.random((b, c)) > 0.25, jnp.int32)
+    got = flash_decode(q, k, v, valid, block_c=bc, interpret=True)
+    want = flash_decode_ref(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("b,s,d,n,ch,db", [
+    (2, 16, 8, 4, 8, 4),
+    (1, 33, 16, 8, 16, 16),    # seq padding path
+    (3, 8, 32, 16, 4, 8),      # d blocking
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_selective_scan(b, s, d, n, ch, db, dtype):
+    dt = jnp.asarray(RNG.random((b, s, d)) * 0.1, dtype)
+    bm = jnp.asarray(RNG.standard_normal((b, s, n)), dtype)
+    cm = jnp.asarray(RNG.standard_normal((b, s, n)), dtype)
+    x = jnp.asarray(RNG.standard_normal((b, s, d)), dtype)
+    a = jnp.asarray(-RNG.random((d, n)), jnp.float32)
+    dsk = jnp.asarray(RNG.random(d), jnp.float32)
+    got = selective_scan(dt, bm, cm, x, a, dsk, chunk=ch, d_block=db,
+                         interpret=True)
+    want = selective_scan_ref(dt, bm, cm, x, a, dsk)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=5 * _tol(dtype), rtol=5 * _tol(dtype))
+
+
+@pytest.mark.parametrize("b,r,bb", [(5, 12, 2), (1, 8, 4), (9, 25, 8)])
+def test_sinkhorn(b, r, bb):
+    mu = RNG.random((b, r)) + 0.05
+    mu /= mu.sum(1, keepdims=True)
+    nu = RNG.random((b, r)) + 0.05
+    nu /= nu.sum(1, keepdims=True)
+    c = RNG.random((b, r, r))
+    args = [jnp.asarray(x, jnp.float32) for x in (mu, nu, c)]
+    got = sinkhorn_batched(*args, block_b=bb, interpret=True)
+    want = sinkhorn_ref(*args)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+    # marginals of the plan must match inputs
+    np.testing.assert_allclose(np.asarray(got.sum(-1)), mu, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(got.sum(-2)), nu, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,s,bn,bs", [(37, 23, 16, 8), (8, 8, 8, 8),
+                                       (100, 60, 32, 32)])
+def test_compat_score(n, s, bn, bs):
+    tf_ = np.ones((n, 8), np.float32)
+    tf_[:, 0] = RNG.uniform(50, 200, n)
+    tf_[:, 1] = RNG.uniform(2, 80, n)
+    tf_[:, 2:5] = np.eye(3)[RNG.integers(0, 3, n)]
+    sf_ = np.ones((s, 8), np.float32)
+    sf_[:, 0] = RNG.uniform(60, 900, s)
+    sf_[:, 1] = RNG.uniform(16, 80, s)
+    sf_[:, 2:5] = np.eye(3)[RNG.integers(0, 3, s)]
+    sf_[:, 5] = RNG.random(s)
+    sf_[:, 6] = RNG.random(s) * 3
+    sf_[:, 7] = RNG.uniform(3, 20, s)
+    loc = RNG.random((n, s)).astype(np.float32)
+    got = compat_score(jnp.asarray(tf_), jnp.asarray(sf_), jnp.asarray(loc),
+                       block_n=bn, block_s=bs, interpret=True)
+    want = compat_score_ref(jnp.asarray(tf_), jnp.asarray(sf_),
+                            jnp.asarray(loc))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+from repro.kernels.flash_prefill import flash_prefill, flash_prefill_ref
+from repro.kernels.flash_prefill.ops import prefill_attention
+
+
+@pytest.mark.parametrize("b,kh,g,s,hd,bq,bk,win", [
+    (2, 2, 2, 32, 32, 8, 8, None),
+    (1, 1, 4, 33, 64, 16, 8, None),   # ragged padding
+    (2, 2, 1, 64, 32, 16, 16, 12),    # sliding window (block skipping)
+    (1, 4, 1, 48, 128, 16, 16, None), # MQA-ish, MXU-aligned hd
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_prefill(b, kh, g, s, hd, bq, bk, win, dtype):
+    q = jnp.asarray(RNG.standard_normal((b, kh, g, s, hd)), dtype)
+    k = jnp.asarray(RNG.standard_normal((b, kh, s, hd)), dtype)
+    v = jnp.asarray(RNG.standard_normal((b, kh, s, hd)), dtype)
+    got = flash_prefill(q, k, v, window=win, block_q=bq, block_k=bk,
+                        interpret=True)
+    want = flash_prefill_ref(q, k, v, window=win)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=3 * _tol(dtype), rtol=3 * _tol(dtype))
+
+
+def test_flash_prefill_matches_model_attention():
+    from repro.models.layers import gqa_attention
+    q = jnp.asarray(RNG.standard_normal((2, 24, 8, 32)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((2, 24, 2, 32)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((2, 24, 2, 32)), jnp.float32)
+    got = prefill_attention(q, k, v, block_q=8, block_k=8, interpret=True)
+    pos = jnp.arange(24)
+    want = gqa_attention(q, k, v, pos, pos, causal=True, q_chunk=8,
+                         kv_chunk=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)

@@ -1,0 +1,150 @@
+"""Layer-level properties: RoPE, norms, flash-style attention vs naive,
+MoE local dispatch."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import MoEConfig
+from repro.models.layers import (apply_rope, gqa_attention, layernorm,
+                                 rmsnorm, sinusoidal_positions)
+from repro.models.moe import moe_ffn_local
+
+
+def test_rope_preserves_norm():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2, 6, 4, 8)),
+                    jnp.float32)
+    pos = jnp.arange(6)
+    y = apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """q(m)·k(n) depends only on m - n."""
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, 16)), jnp.float32)
+
+    def dot_at(m, n):
+        qm = apply_rope(q, jnp.asarray([m]), 10000.0)
+        kn = apply_rope(k, jnp.asarray([n]), 10000.0)
+        return float(jnp.sum(qm * kn))
+
+    assert dot_at(5, 3) == pytest.approx(dot_at(12, 10), abs=1e-4)
+    assert dot_at(7, 7) == pytest.approx(dot_at(0, 0), abs=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 12), st.integers(0, 100))
+def test_rmsnorm_scale_invariance(b, d, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((b, d)) * 10, jnp.float32)
+    y = rmsnorm(x, jnp.ones(d), 1e-6)
+    rms = np.sqrt(np.mean(np.asarray(y) ** 2, -1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+    # scaling input does not change output
+    y2 = rmsnorm(x * 7.3, jnp.ones(d), 1e-6)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), atol=1e-4)
+
+
+def test_layernorm_moments():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((3, 32)) * 5 + 2,
+                    jnp.float32)
+    y = np.asarray(layernorm(x, jnp.ones(32), jnp.zeros(32), 1e-6))
+    np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(y.std(-1), 1.0, rtol=1e-3)
+
+
+def _naive_attention(q, k, v, causal=True, window=None, prefix_len=0):
+    b, s, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qr = q.reshape(b, s, kh, g, hd)
+    sc = jnp.einsum("bskgh,btkh->bkgst", qr, k) * hd ** -0.5
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    ok = jnp.ones((s, s), bool)
+    if causal:
+        c = kpos <= qpos
+        if prefix_len:
+            c |= kpos < prefix_len
+        ok &= c
+    if window is not None:
+        w = kpos > qpos - window
+        if prefix_len:
+            w |= kpos < prefix_len
+        ok &= w
+    sc = jnp.where(ok, sc, -1e30)
+    p = jax.nn.softmax(sc, -1)
+    o = jnp.einsum("bkgst,btkh->bskgh", p, v)
+    return o.reshape(b, s, h, hd)
+
+
+@pytest.mark.parametrize("s,qc,kc,window,prefix", [
+    (16, 4, 4, None, 0),
+    (17, 8, 4, None, 0),      # padding
+    (32, 8, 8, 6, 0),         # sliding window
+    (24, 6, 8, None, 5),      # prefix-LM (paligemma)
+    (16, 64, 64, None, 0),    # single chunk
+])
+def test_flash_attention_matches_naive(s, qc, kc, window, prefix):
+    rng = np.random.default_rng(0)
+    b, h, kh, hd = 2, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kh, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kh, hd)), jnp.float32)
+    pos = jnp.arange(s)
+    got = gqa_attention(q, k, v, pos, pos, causal=True, window=window,
+                        prefix_len=prefix, q_chunk=qc, kv_chunk=kc)
+    want = _naive_attention(q, k, v, causal=True, window=window,
+                            prefix_len=prefix)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_sinusoidal_positions():
+    pe = sinusoidal_positions(16, 8)
+    assert pe.shape == (16, 8)
+    assert float(pe[0, 0]) == 0.0 and float(pe[0, 1]) == 1.0
+
+
+def test_moe_local_full_routing_equals_dense():
+    """top_k == num_experts with uniform router -> average of all experts."""
+    rng = np.random.default_rng(0)
+    t, d, f, e = 6, 8, 16, 2
+    m = MoEConfig(num_experts=e, top_k=e, d_ff_expert=f)
+    p = {
+        "router": jnp.zeros((d, e)),  # uniform gates
+        "w_gate": jnp.asarray(rng.standard_normal((e, d, f)) * 0.1, jnp.float32),
+        "w_up": jnp.asarray(rng.standard_normal((e, d, f)) * 0.1, jnp.float32),
+        "w_down": jnp.asarray(rng.standard_normal((e, f, d)) * 0.1, jnp.float32),
+    }
+    x = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    y, aux = moe_ffn_local(p, x, m, jax.nn.silu)
+    dense = sum(
+        0.5 * (jax.nn.silu(x @ p["w_gate"][i]) * (x @ p["w_up"][i]))
+        @ p["w_down"][i]
+        for i in range(e))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(dense), atol=1e-5)
+    assert float(aux) == pytest.approx(1.0, rel=1e-3)  # perfectly balanced
+
+
+def test_moe_capacity_drops():
+    """With capacity 1 and all tokens to one expert, extras are dropped."""
+    t, d, f = 5, 4, 8
+    m = MoEConfig(num_experts=2, top_k=1, d_ff_expert=f)
+    router = jnp.zeros((d, 2)).at[:, 0].set(10.0)   # everything -> expert 0
+    p = {
+        "router": router,
+        "w_gate": jnp.ones((2, d, f)) * 0.1,
+        "w_up": jnp.ones((2, d, f)) * 0.1,
+        "w_down": jnp.ones((2, f, d)) * 0.1,
+    }
+    x = jnp.ones((t, d))
+    y, _ = moe_ffn_local(p, x, m, jax.nn.silu, capacity=1)
+    nonzero_rows = int((jnp.abs(np.asarray(y)).sum(-1) > 1e-9).sum())
+    assert nonzero_rows == 1      # only the first token fit

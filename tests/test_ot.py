@@ -1,0 +1,70 @@
+"""Optimal transport: Sinkhorn vs exact LP + property-based invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ot import (cost_matrix, exact_ot, normalize_masses, ot_cost,
+                           routing_probs, sinkhorn)
+
+
+def _rand_problem(rng, r):
+    mu = rng.random(r) + 0.05
+    mu /= mu.sum()
+    nu = rng.random(r) + 0.05
+    nu /= nu.sum()
+    c = rng.random((r, r))
+    return mu, nu, c
+
+
+def test_sinkhorn_close_to_lp():
+    rng = np.random.default_rng(0)
+    mu, nu, c = _rand_problem(rng, 10)
+    p_lp = exact_ot(mu, nu, c)
+    p_sk = np.asarray(sinkhorn(jnp.asarray(mu), jnp.asarray(nu),
+                               jnp.asarray(c), reg=0.01, n_iters=500))
+    assert (p_sk * c).sum() <= (p_lp * c).sum() * 1.05 + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 16), st.integers(0, 10_000))
+def test_sinkhorn_marginals(r, seed):
+    rng = np.random.default_rng(seed)
+    mu, nu, c = _rand_problem(rng, r)
+    p = np.asarray(sinkhorn(jnp.asarray(mu), jnp.asarray(nu), jnp.asarray(c),
+                            reg=0.05, n_iters=200))
+    assert np.all(p >= -1e-9)
+    np.testing.assert_allclose(p.sum(1), mu, atol=2e-3)
+    np.testing.assert_allclose(p.sum(0), nu, atol=2e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 12), st.integers(0, 10_000))
+def test_routing_probs_row_stochastic(r, seed):
+    rng = np.random.default_rng(seed)
+    mu, nu, c = _rand_problem(rng, r)
+    p = sinkhorn(jnp.asarray(mu), jnp.asarray(nu), jnp.asarray(c))
+    probs = np.asarray(routing_probs(p))
+    np.testing.assert_allclose(probs.sum(1), np.ones(r), atol=1e-5)
+    assert np.all(probs >= 0)
+
+
+def test_sinkhorn_beats_uniform_plan():
+    rng = np.random.default_rng(1)
+    mu, nu, c = _rand_problem(rng, 8)
+    p = sinkhorn(jnp.asarray(mu), jnp.asarray(nu), jnp.asarray(c), reg=0.02,
+                 n_iters=300)
+    uniform = np.outer(mu, nu)   # independent coupling, same marginals
+    assert float(ot_cost(p, jnp.asarray(c))) <= (uniform * c).sum() + 1e-6
+
+
+def test_normalize_and_cost_matrix():
+    req = jnp.asarray([3.0, 1.0, 0.0])
+    cap = jnp.asarray([1.0, 1.0, 2.0])
+    mu, nu = normalize_masses(req, cap)
+    assert float(mu.sum()) == pytest.approx(1.0)
+    assert float(nu.sum()) == pytest.approx(1.0)
+    lat = jnp.asarray(np.full((3, 3), 10.0))
+    c = cost_matrix(jnp.asarray([1.0, 2.0, 3.0]), lat, w1=1.0, w2=0.01)
+    # power cost of destination dominates
+    assert float(c[0, 2]) > float(c[0, 0])

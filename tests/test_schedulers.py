@@ -1,0 +1,86 @@
+"""Scheduler behaviour: baselines + TORTA end-to-end on the shared world."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.baselines import (ReactiveOTScheduler, RoundRobinScheduler,
+                             SDIBScheduler, SkyLBScheduler)
+from repro.core.micro import MicroAllocator, target_active_servers
+from repro.core.torta import TortaScheduler
+from repro.sim import Engine
+
+
+def _run(small_world, cluster, sched):
+    topo, _, wl = small_world
+    return Engine(topo, cluster, wl, sched, seed=0).run().summary()
+
+
+@pytest.mark.parametrize("factory", [
+    RoundRobinScheduler,
+    SkyLBScheduler,
+    SDIBScheduler,
+])
+def test_baselines_complete_tasks(small_world, fresh_cluster, factory):
+    s = _run(small_world, fresh_cluster, factory())
+    assert s["completion_rate"] > 0.85
+    assert s["mean_response_s"] > 0
+
+
+def test_reactive_ot(small_world, fresh_cluster):
+    topo = small_world[0]
+    sched = ReactiveOTScheduler(topo.n_regions)
+    s = _run(small_world, fresh_cluster, sched)
+    assert s["completion_rate"] > 0.85
+    assert len(sched.switching_costs()) > 1
+
+
+def test_torta_end_to_end(small_world):
+    topo, cluster, wl = small_world
+    res = {}
+    for name, sched in [("torta", TortaScheduler(topo.n_regions, seed=0)),
+                        ("rr", RoundRobinScheduler())]:
+        cl = copy.deepcopy(cluster)
+        res[name] = _run(small_world, cl, sched)
+    assert res["torta"]["completion_rate"] > 0.9
+    # TORTA must beat plain RR on power and on switching overhead
+    assert res["torta"]["power_cost_total"] < res["rr"]["power_cost_total"]
+    assert res["torta"]["operational_overhead"] <= \
+        res["rr"]["operational_overhead"] + 1e-9
+
+
+def test_torta_prediction_noise_degrades_gracefully(small_world):
+    topo, cluster, _ = small_world
+    r = topo.n_regions
+    clean = TortaScheduler(r, seed=0, prediction_noise=0.0)
+    noisy = TortaScheduler(r, seed=0, prediction_noise=1.0)
+    s_clean = _run(small_world, copy.deepcopy(cluster), clean)
+    s_noisy = _run(small_world, copy.deepcopy(cluster), noisy)
+    # robustness claim (Fig 12): degradation is bounded, not catastrophic
+    assert s_noisy["mean_response_s"] < 5.0 * max(s_clean["mean_response_s"], 1)
+    assert s_noisy["completion_rate"] > 0.85
+
+
+def test_eq6_activation_target():
+    # Q=10 queued, F=40 predicted, sigma=1 -> (10+40+6.3)/5 = 11.3 -> 12
+    n = target_active_servers(10, 40, 5.0, 100, sigma=1.0, headroom=1.0)
+    assert n == 12
+    assert target_active_servers(0, 0, 5.0, 100) == 1       # floor
+    assert target_active_servers(1e9, 1, 5.0, 7) == 7       # cap at S_r
+
+
+def test_micro_respects_memory(small_world, fresh_cluster):
+    from repro.sim.workload import Task
+    topo, _, wl = small_world
+    from repro.sim.engine import Engine
+    eng = Engine(topo, fresh_cluster, wl, RoundRobinScheduler(), seed=0)
+    obs = eng._obs(0)
+    micro = MicroAllocator()
+    big = Task(id=1, origin=0, model="mixtral-8x7b", kind="memory",
+               work_s=30.0, mem_gb=60.0, deadline_slot=5, arrival_slot=0)
+    out = micro.assign_region(obs, 0, [big])
+    tgt = out[1]
+    if tgt is not None:
+        _, sidx = tgt
+        srv = obs.cluster.regions[0].servers[sidx]
+        assert srv.mem_gb >= big.mem_gb

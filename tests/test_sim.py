@@ -1,0 +1,98 @@
+"""Simulator invariants (hypothesis) + engine behaviour."""
+import copy
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.baselines import RoundRobinScheduler
+from repro.sim import (Engine, make_cluster, make_topology, make_workload)
+from repro.sim.engine import FailureEvent
+from repro.sim.metrics import load_balance_coefficient, prediction_accuracy
+from repro.sim.topology import TOPOLOGY_SPECS, make_topology
+from repro.sim.workload import generate_traffic
+
+
+@pytest.mark.parametrize("name", sorted(TOPOLOGY_SPECS))
+def test_topologies(name):
+    topo = make_topology(name, seed=0)
+    n, bw, base_lat, _ = TOPOLOGY_SPECS[name]
+    assert topo.n_regions == n
+    assert topo.latency.shape == (n, n)
+    assert np.allclose(topo.latency, topo.latency.T, atol=1e-9)
+    off = topo.latency[~np.eye(n, dtype=bool)]
+    assert off.mean() == pytest.approx(base_lat, rel=0.05)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 30), st.integers(0, 1000))
+def test_lb_coefficient_bounds(n, seed):
+    rng = np.random.default_rng(seed)
+    utils = rng.random(n)
+    lb = load_balance_coefficient(utils)
+    assert 0.0 < lb <= 1.0
+    assert load_balance_coefficient(np.full(n, 0.7)) == pytest.approx(1.0)
+
+
+def test_prediction_accuracy_metric():
+    actual = np.array([10.0, 20.0, 30.0])
+    assert prediction_accuracy(actual, actual) == pytest.approx(1.0)
+    assert prediction_accuracy(actual * 2, actual) < 0.5
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 500))
+def test_traffic_generator_positive(seed):
+    tr = generate_traffic(48, 6, seed)
+    assert tr.shape == (48, 6)
+    assert np.all(tr > 0)
+
+
+def test_engine_task_conservation(small_world, fresh_cluster):
+    topo, _, wl = small_world
+    eng = Engine(topo, fresh_cluster, wl, RoundRobinScheduler(), seed=0)
+    m = eng.run()
+    arrived = sum(len(ts) for ts in wl.tasks)
+    buffered = sum(len(b) for b in eng.buffers)
+    assert m.completed + m.dropped + buffered == arrived
+    s = m.summary()
+    assert 0 < s["load_balance"] <= 1.0
+    assert s["power_cost_total"] > 0
+    assert s["mean_response_s"] > 0
+
+
+def test_failure_injection(small_world, fresh_cluster):
+    topo, _, wl = small_world
+    fail = FailureEvent(region=0, start_slot=5, duration=5)
+    eng = Engine(topo, fresh_cluster, wl, RoundRobinScheduler(),
+                 failures=[fail], seed=0)
+    eng.run(12)
+    # during failure the region must have zero active servers at slot 6-9
+    # (engine restores after duration) — after run(12), restored
+    reg = eng.cluster.regions[0]
+    assert all(s.state == "active" for s in reg.servers)
+
+
+def test_server_switch_cost_model():
+    from repro.sim.cluster import Server, MODEL_SWITCH_S
+    s = Server(gpu="V100", capacity=4.0)
+    c1 = s.switch_cost_s("llama3-8b")
+    assert c1 == pytest.approx(MODEL_SWITCH_S)
+    s.note_model("llama3-8b")
+    assert s.switch_cost_s("llama3-8b") == 0.0
+    s.note_model("tinyllama-1.1b")
+    # warm cache: cheaper partial reload
+    c2 = s.switch_cost_s("llama3-8b")
+    assert 0 < c2 < c1
+    # H100 switches faster than V100
+    h = Server(gpu="H100", capacity=40.0)
+    assert h.switch_cost_s("llama3-8b") < c1
+
+
+def test_workload_task_fields(small_world):
+    _, _, wl = small_world
+    for ts in wl.tasks[:3]:
+        for t in ts:
+            assert t.work_s > 0 and t.mem_gb > 0
+            assert t.kind in ("compute", "memory", "lightweight")
+            assert t.deadline_slot > t.arrival_slot
