@@ -7,7 +7,6 @@ macro apportionment.
 """
 from __future__ import annotations
 
-import copy
 from typing import Dict, List
 
 import numpy as np
@@ -19,12 +18,12 @@ def run(*, slots: int = 80, util: float = 0.35, topology: str = "abilene",
         verbose: bool = True) -> List[Dict]:
     import repro.core.micro as micro
     from repro.core.torta import TortaScheduler
-    from repro.sim import Engine, make_cluster, make_topology, make_workload
+    from repro.sim import Engine, make_cluster_state, make_topology, make_workload
     from repro.sim.cluster import throughput_per_slot
 
     topo = make_topology(topology, seed=1)
     r = topo.n_regions
-    cluster0 = make_cluster(r, seed=3)
+    cluster0 = make_cluster_state(r, seed=3)
     rate = util * throughput_per_slot(cluster0) / r
     wl = make_workload(slots, r, seed=2, base_rate=rate)
 
@@ -40,7 +39,7 @@ def run(*, slots: int = 80, util: float = 0.35, topology: str = "abilene",
     out = []
     for name, kw in variants:
         sched = TortaScheduler(r, seed=0, **kw)
-        eng = Engine(topo, copy.deepcopy(cluster0), wl, sched, seed=4)
+        eng = Engine(topo, cluster0.copy(), wl, sched, seed=4)
         s = eng.run().summary()
         rec = {"variant": name, **{k: s[k] for k in (
             "mean_response_s", "p95_response_s", "load_balance",
@@ -58,7 +57,7 @@ def run(*, slots: int = 80, util: float = 0.35, topology: str = "abilene",
     try:
         micro.W_WARM = 0.0
         sched = TortaScheduler(r, seed=0)
-        eng = Engine(topo, copy.deepcopy(cluster0), wl, sched, seed=4)
+        eng = Engine(topo, cluster0.copy(), wl, sched, seed=4)
         s = eng.run().summary()
         rec = {"variant": "no-warm-locality", **{k: s[k] for k in (
             "mean_response_s", "p95_response_s", "load_balance",

@@ -6,7 +6,6 @@ is calibrated to ~35% fleet utilization (the regime where scheduling
 matters but baselines remain functional, §VI-A)."""
 from __future__ import annotations
 
-import copy
 import json
 import pathlib
 import time
@@ -37,14 +36,14 @@ def run_matrix(*, slots: int = 120, seeds=(0,), util: float = 0.35,
                topologies=None, schedulers=None, failures=None,
                verbose: bool = True) -> Dict:
     """Returns {topology: {scheduler: summary-dict-with-extras}}."""
-    from repro.sim import Engine, make_cluster, make_topology, make_workload
+    from repro.sim import Engine, make_cluster_state, make_topology, make_workload
     from repro.sim.cluster import throughput_per_slot
 
     out: Dict[str, Dict] = {}
     for topo_name in (topologies or TOPOLOGIES):
         topo = make_topology(topo_name, seed=1)
         r = topo.n_regions
-        cluster0 = make_cluster(r, seed=3)
+        cluster0 = make_cluster_state(r, seed=3)
         rate = util * throughput_per_slot(cluster0) / r
         out[topo_name] = {}
         for seed in seeds:
@@ -53,7 +52,7 @@ def run_matrix(*, slots: int = 120, seeds=(0,), util: float = 0.35,
             if schedulers:
                 scheds = {k: v for k, v in scheds.items() if k in schedulers}
             for name, sched in scheds.items():
-                cl = copy.deepcopy(cluster0)
+                cl = cluster0.copy()
                 t0 = time.time()
                 eng = Engine(topo, cl, wl, sched, seed=4 + seed,
                              failures=failures)

@@ -1,0 +1,104 @@
+"""Slot-throughput scaling: array-native engine vs per-object reference.
+
+Measures slots/sec for the struct-of-arrays ``sim.engine.Engine`` against
+the frozen object-per-server ``sim.reference.ReferenceEngine`` across
+cluster sizes (5x50, 15x200, 25x500 region x server configs), both driving
+the full TORTA scheduler at ~35% fleet utilization.  Emits
+``BENCH_engine_scale.json`` at the repo root so the perf trajectory is
+tracked across PRs.
+
+    PYTHONPATH=src python benchmarks/engine_scale.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import networkx as nx
+import numpy as np
+
+OUT_PATH = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_engine_scale.json"
+
+CONFIGS = [
+    # (regions, servers/region, array slots, reference slots)
+    (5, 50, 12, 4),
+    (15, 200, 8, 2),
+    (25, 500, 4, 1),
+]
+
+
+def synthetic_topology(r: int, seed: int = 0):
+    from repro.sim.topology import Topology
+    rng = np.random.default_rng(seed)
+    lat = rng.uniform(10, 80, (r, r))
+    lat = (lat + lat.T) / 2
+    np.fill_diagonal(lat, 0.0)
+    return Topology(name=f"synth{r}", n_regions=r, bandwidth_gbps=10,
+                    latency=lat, graph=nx.cycle_graph(r))
+
+
+def bench_config(r: int, spr: int, slots_new: int, slots_ref: int, *,
+                 run_reference: bool = True, seed: int = 3) -> dict:
+    from repro.core.torta import TortaScheduler
+    from repro.sim import Engine, make_cluster_state, make_workload
+    from repro.sim.cluster import throughput_per_slot
+    from repro.sim.reference import ReferenceEngine, make_reference_torta
+
+    topo = synthetic_topology(r)
+    st = make_cluster_state(r, seed=seed, servers_per_region=(spr, spr + 1))
+    rate = 0.35 * throughput_per_slot(st) / r
+    wl = make_workload(max(slots_new, slots_ref), r, seed=2, base_rate=rate)
+    n_tasks_slot = len(wl.tasks[0])
+
+    t0 = time.time()
+    Engine(topo, st.copy(), wl, TortaScheduler(r, seed=0)).run(slots_new)
+    dt_new = (time.time() - t0) / slots_new
+
+    row = {
+        "regions": r, "servers_per_region": spr, "servers": st.n_servers,
+        "tasks_per_slot": n_tasks_slot,
+        "array_s_per_slot": dt_new,
+        "array_slots_per_s": 1.0 / dt_new,
+    }
+    if run_reference:
+        cl = st.to_cluster()
+        t0 = time.time()
+        ReferenceEngine(topo, cl, wl,
+                        make_reference_torta(r, seed=0)).run(slots_ref)
+        dt_ref = (time.time() - t0) / slots_ref
+        row.update(reference_s_per_slot=dt_ref,
+                   reference_slots_per_s=1.0 / dt_ref,
+                   speedup=dt_ref / dt_new)
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the reference run on the largest config")
+    args = ap.parse_args()
+
+    rows = []
+    for i, (r, spr, s_new, s_ref) in enumerate(CONFIGS):
+        run_ref = not (args.quick and i == len(CONFIGS) - 1)
+        print(f"[engine_scale] {r} regions x ~{spr} servers ...", flush=True)
+        row = bench_config(r, spr, s_new, s_ref, run_reference=run_ref)
+        spd = row.get("speedup")
+        print(f"  array {row['array_s_per_slot']:.3f} s/slot"
+              + (f"  reference {row['reference_s_per_slot']:.2f} s/slot"
+                 f"  -> {spd:.1f}x" if spd else ""), flush=True)
+        rows.append(row)
+
+    out = {"benchmark": "engine_scale",
+           "scheduler": "TORTA (numpy micro backend)",
+           "utilization": 0.35,
+           "rows": rows}
+    OUT_PATH.write_text(json.dumps(out, indent=1))
+    print(f"wrote {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    main()

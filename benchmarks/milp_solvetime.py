@@ -29,15 +29,14 @@ def run(task_counts=(50, 100, 200, 400, 800), *, time_limit: float = 120.0,
 
 def torta_decision_time(n_tasks: int = 800, n_regions: int = 5) -> float:
     """Per-slot TORTA decision latency on a same-size instance."""
-    import copy
     from repro.core.torta import TortaScheduler
-    from repro.sim import Engine, make_cluster, make_topology, make_workload
+    from repro.sim import Engine, make_cluster_state, make_topology, make_workload
     topo = make_topology("abilene", seed=1)
-    cluster = make_cluster(topo.n_regions, seed=3)
+    cluster = make_cluster_state(topo.n_regions, seed=3)
     wl = make_workload(3, topo.n_regions, seed=2,
                        base_rate=n_tasks / topo.n_regions)
     sched = TortaScheduler(topo.n_regions, seed=0)
-    eng = Engine(topo, copy.deepcopy(cluster), wl, sched, seed=4)
+    eng = Engine(topo, cluster.copy(), wl, sched, seed=4)
     t0 = time.time()
     eng.run(3)
     return (time.time() - t0) / 3

@@ -5,7 +5,6 @@ measured with Eq 12 against the actual next-slot arrival distributions.
 Baselines have no predictor -> flat lines."""
 from __future__ import annotations
 
-import copy
 from typing import Dict, List
 
 import numpy as np
@@ -17,13 +16,13 @@ def run(*, slots: int = 80, util: float = 0.35, topology: str = "abilene",
         noises=(0.0, 0.25, 0.5, 0.75, 0.95), verbose=True) -> Dict:
     from repro.baselines import RoundRobinScheduler, SDIBScheduler, SkyLBScheduler
     from repro.core.torta import TortaScheduler
-    from repro.sim import Engine, make_cluster, make_topology, make_workload
+    from repro.sim import Engine, make_cluster_state, make_topology, make_workload
     from repro.sim.cluster import throughput_per_slot
     from repro.sim.metrics import prediction_accuracy
 
     topo = make_topology(topology, seed=1)
     r = topo.n_regions
-    cluster0 = make_cluster(r, seed=3)
+    cluster0 = make_cluster_state(r, seed=3)
     rate = util * throughput_per_slot(cluster0) / r
     wl = make_workload(slots, r, seed=2, base_rate=rate)
     actual = wl.arrivals_matrix()
@@ -32,7 +31,7 @@ def run(*, slots: int = 80, util: float = 0.35, topology: str = "abilene",
     out = {"torta": [], "baselines": {}}
     for noise in noises:
         sched = TortaScheduler(r, seed=0, prediction_noise=noise)
-        eng = Engine(topo, copy.deepcopy(cluster0), wl, sched, seed=4)
+        eng = Engine(topo, cluster0.copy(), wl, sched, seed=4)
         s = eng.run().summary()
         preds = sched.prediction_log
         n = min(len(preds) - 1, actual_dist.shape[0] - 1)
@@ -51,7 +50,7 @@ def run(*, slots: int = 80, util: float = 0.35, topology: str = "abilene",
     for name, sched in [("RR", RoundRobinScheduler()),
                         ("SkyLB", SkyLBScheduler()),
                         ("SDIB", SDIBScheduler())]:
-        s = Engine(topo, copy.deepcopy(cluster0), wl, sched,
+        s = Engine(topo, cluster0.copy(), wl, sched,
                    seed=4).run().summary()
         out["baselines"][name] = s["mean_response_s"]
     return out

@@ -9,7 +9,7 @@ import numpy as np
 
 from repro.baselines import ReactiveOTScheduler, SkyLBScheduler
 from repro.core.torta import TortaScheduler
-from repro.sim import Engine, make_cluster, make_topology, make_workload
+from repro.sim import Engine, make_cluster_state, make_topology, make_workload
 from repro.sim.cluster import throughput_per_slot
 from repro.sim.engine import FailureEvent
 
@@ -17,11 +17,11 @@ from repro.sim.engine import FailureEvent
 def main():
     topo = make_topology("gabriel", seed=1)
     r = topo.n_regions
-    cluster = make_cluster(r, seed=3)
-    rate = 0.4 * throughput_per_slot(cluster) / r
+    state = make_cluster_state(r, seed=3)
+    rate = 0.4 * throughput_per_slot(state) / r
     wl = make_workload(60, r, seed=2, base_rate=rate)
     # fail the highest-capacity region mid-run ("CRITICAL FAILURE", Fig 4.a)
-    caps = [reg.total_capacity for reg in cluster.regions]
+    caps = state.total_capacities()
     victim = int(np.argmax(caps))
     failures = [FailureEvent(region=victim, start_slot=20, duration=12)]
     print(f"failing region {victim} (capacity {caps[victim]:.0f}) "
@@ -29,7 +29,7 @@ def main():
 
     for sched in [TortaScheduler(r, seed=0), ReactiveOTScheduler(r),
                   SkyLBScheduler()]:
-        eng = Engine(topo, copy.deepcopy(cluster), wl, sched, seed=4,
+        eng = Engine(topo, state.copy(), wl, sched, seed=4,
                      failures=copy.deepcopy(failures))
         agg = eng.run()
         s = agg.summary()

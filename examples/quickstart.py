@@ -3,26 +3,24 @@ topology with TORTA and compare against round-robin.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import copy
-
 from repro.baselines import RoundRobinScheduler
 from repro.core.torta import TortaScheduler
-from repro.sim import Engine, make_cluster, make_topology, make_workload
+from repro.sim import Engine, make_cluster_state, make_topology, make_workload
 from repro.sim.cluster import throughput_per_slot
 
 
 def main():
     topo = make_topology("abilene", seed=1)
     r = topo.n_regions
-    cluster = make_cluster(r, seed=3)
-    rate = 0.35 * throughput_per_slot(cluster) / r
+    state = make_cluster_state(r, seed=3)
+    rate = 0.35 * throughput_per_slot(state) / r
     workload = make_workload(60, r, seed=2, base_rate=rate)
     print(f"topology={topo.name} regions={r} "
-          f"servers={sum(len(reg.servers) for reg in cluster.regions)} "
+          f"servers={state.n_servers} "
           f"tasks={sum(len(t) for t in workload.tasks)}")
 
     for sched in [TortaScheduler(r, seed=0), RoundRobinScheduler()]:
-        eng = Engine(topo, copy.deepcopy(cluster), workload, sched, seed=4)
+        eng = Engine(topo, state.copy(), workload, sched, seed=4)
         s = eng.run().summary()
         print(f"\n== {sched.name}")
         for k in ("mean_response_s", "p95_response_s", "mean_wait_s",

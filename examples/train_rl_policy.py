@@ -5,7 +5,6 @@ trained policy inside the full simulator.
     PYTHONPATH=src python examples/train_rl_policy.py [--iters 30]
 """
 import argparse
-import copy
 
 import numpy as np
 
@@ -15,7 +14,7 @@ from repro.core.ppo import PPOTrainer
 from repro.core.predictor import PredictorTrainer, make_dataset
 from repro.core.theory import estimate_k0_from_reactive
 from repro.core.torta import TortaScheduler
-from repro.sim import Engine, make_cluster, make_topology, make_workload
+from repro.sim import Engine, make_cluster_state, make_topology, make_workload
 from repro.sim.cluster import throughput_per_slot
 from repro.sim.metrics import prediction_accuracy
 
@@ -28,12 +27,12 @@ def main():
 
     topo = make_topology("abilene", seed=1)
     r = topo.n_regions
-    cluster = make_cluster(r, seed=3)
-    rate = 0.35 * throughput_per_slot(cluster) / r
+    state = make_cluster_state(r, seed=3)
+    rate = 0.35 * throughput_per_slot(state) / r
     train_wl = make_workload(160, r, seed=11, base_rate=rate)
     traffic = train_wl.arrivals_matrix().astype(np.float32)
-    cap = np.array([reg.total_capacity for reg in cluster.regions])
-    power = cluster.power_prices()
+    cap = state.total_capacities()
+    power = state.power_prices()
 
     # ---- 1. offline predictor training (Appendix B) ----
     util = np.clip(traffic / traffic.max(), 0, 1)
@@ -69,7 +68,7 @@ def main():
                                          predictor=pred)),
         ("TORTA(OT-smoothed)", TortaScheduler(r, seed=0, predictor=pred)),
     ]:
-        eng = Engine(topo, copy.deepcopy(cluster), eval_wl, sched, seed=4)
+        eng = Engine(topo, state.copy(), eval_wl, sched, seed=4)
         s = eng.run().summary()
         print(f"[eval] {name:20s} resp={s['mean_response_s']:.2f}s "
               f"LB={s['load_balance']:.3f} power=${s['power_cost_total']:.2f} "

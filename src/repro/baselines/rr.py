@@ -3,7 +3,11 @@ servers within each region, "while maintaining necessary capacity and
 compatibility constraints" — compatibility includes the loaded model:
 rotation happens within per-model replica pools, growing a pool only when
 its replicas are saturated (otherwise a literal per-task rotation would
-strawman the baseline with a model switch per task)."""
+strawman the baseline with a model switch per task).
+
+Consumes the struct-of-arrays ``SlotObs.state``; eligibility checks are
+whole-region array operations.
+"""
 from __future__ import annotations
 
 from typing import Dict, List, Tuple
@@ -11,6 +15,7 @@ from typing import Dict, List, Tuple
 import numpy as np
 
 from repro.sim.engine import SlotDecision, SlotObs
+from repro.sim.state import ACTIVE
 from repro.sim.workload import Task
 
 
@@ -28,26 +33,28 @@ class RoundRobinScheduler:
 
     def _grow_pool(self, obs: SlotObs, task: Task) -> bool:
         """Add the next server (region round-robin) to the model's pool."""
-        r = obs.cluster.n_regions
+        st = obs.state
+        r = st.n_regions
         pool = self.pools.setdefault(task.model, [])
         taken = set(pool)
         for _ in range(r):
             ridx = self._r % r
             self._r += 1
-            reg = obs.cluster.regions[ridx]
-            for sidx, s in enumerate(reg.servers):
-                if s.state != "active" or s.mem_gb < task.mem_gb:
+            sl = st.region_slice(ridx)
+            ok = (st.state[sl] == ACTIVE) & (st.mem_gb[sl] >= task.mem_gb)
+            for sidx in np.flatnonzero(ok):
+                if (ridx, int(sidx)) in taken:
                     continue
-                if (ridx, sidx) in taken:
-                    continue
-                pool.append((ridx, sidx))
+                pool.append((ridx, int(sidx)))
                 return True
         return False
 
     def schedule(self, obs: SlotObs, tasks: List[Task]) -> SlotDecision:
+        st = obs.state
         assignments = {}
         sat = self.saturation_slots * obs.slot_seconds
         proj: Dict[Tuple[int, int], float] = {}
+        sizes = st.region_sizes()
         for task in tasks:
             pool = self.pools.setdefault(task.model, [])
             if not pool:
@@ -59,18 +66,17 @@ class RoundRobinScheduler:
                     p = self._ptr.get(task.model, 0)
                     self._ptr[task.model] = p + 1
                     ridx, sidx = pool[p % n]
-                    reg = obs.cluster.regions[ridx]
-                    if sidx >= len(reg.servers):
+                    if sidx >= sizes[ridx]:
                         continue
-                    srv = reg.servers[sidx]
-                    if srv.state != "active" or srv.mem_gb < task.mem_gb:
+                    g = st.gidx(ridx, sidx)
+                    if st.state[g] != ACTIVE or st.mem_gb[g] < task.mem_gb:
                         continue
-                    load = srv.queue_s + proj.get((ridx, sidx), 0.0)
+                    load = st.queue_s[g] + proj.get((ridx, sidx), 0.0)
                     if load > sat:
                         continue
                     assignments[task.id] = (ridx, sidx)
                     proj[(ridx, sidx)] = proj.get((ridx, sidx), 0.0) \
-                        + task.work_s / max(srv.tflops / 112.0, 0.1)
+                        + task.work_s / max(float(st.tflops[g]) / 112.0, 0.1)
                     placed = True
                     break
                 if placed or not self._grow_pool(obs, task):

@@ -1,7 +1,11 @@
 """SDIB baseline (Standard Deviation and Idle-time Balanced), following the
 MERL-LB [49] multi-objective principles: minimize the std-dev of server load
 and the mean GPU idle time.  Greedy: each task goes to the (region, server)
-that minimizes the projected load variance + idle penalty."""
+that minimizes the projected load variance + idle penalty.
+
+Array-native: per-task candidate scoring is one vectorized pass over the
+global struct-of-arrays fleet instead of a dict-of-Server loop.
+"""
 from __future__ import annotations
 
 from typing import List
@@ -9,6 +13,7 @@ from typing import List
 import numpy as np
 
 from repro.sim.engine import SlotDecision, SlotObs
+from repro.sim.state import ACTIVE, model_id
 from repro.sim.workload import Task
 
 
@@ -23,50 +28,39 @@ class SDIBScheduler:
         pass
 
     def schedule(self, obs: SlotObs, tasks: List[Task]) -> SlotDecision:
+        st = obs.state
         assignments = {}
-        # running copy of projected server loads
-        loads = {(ri, si): s.queue_s
-                 for ri, reg in enumerate(obs.cluster.regions)
-                 for si, s in enumerate(reg.servers) if s.state == "active"}
-        idle = {(ri, si): s.idle_slots
-                for ri, reg in enumerate(obs.cluster.regions)
-                for si, s in enumerate(reg.servers) if s.state == "active"}
-        if not loads:
+        act = st.state == ACTIVE
+        if not act.any():
             return SlotDecision(assignments={t.id: None for t in tasks})
-        keys = list(loads)
+        # running copy of projected server loads
+        loads = st.queue_s.astype(np.float64)
+        idle = st.idle_slots.astype(np.float64)
+        region_of = st.region_of
+        speed = np.maximum(st.tflops / 112.0, 0.1)
         for task in tasks:
             # candidate set: origin region + least-loaded few regions
             reg_load = obs.queue_s / np.maximum(obs.capacities, 1e-9)
-            cand_r = set([task.origin]) | set(
-                np.argsort(reg_load)[: self.sample_regions].tolist())
-            best_key, best_score = None, float("inf")
-            vals = np.array([loads[k] for k in keys])
-            mean = vals.mean()
-            for k in keys:
-                ri, si = k
-                if ri not in cand_r:
-                    continue
-                srv = obs.cluster.regions[ri].servers[si]
-                if srv.mem_gb < task.mem_gb:
-                    continue
-                speed = max(srv.tflops / 112.0, 0.1)
-                dl = task.work_s / speed
-                # projected deviation from mean + idle-time pressure:
-                # prefer servers that have been idle (reduces mean idle time)
-                score = abs(loads[k] + dl - mean) \
-                    - self.idle_weight * idle[k] * obs.slot_seconds * 0.1
-                # cache-aware tie-break (paper §VI-C2: SDIB is cache-aware)
-                if srv.current_model == task.model:
-                    score -= 0.5 * obs.slot_seconds
-                if score < best_score:
-                    best_key, best_score = k, score
-            if best_key is None:
+            cand_r = np.zeros(st.n_regions, bool)
+            cand_r[task.origin] = True
+            cand_r[np.argsort(reg_load)[: self.sample_regions]] = True
+            eligible = act & cand_r[region_of] & (st.mem_gb >= task.mem_gb)
+            if not eligible.any():
                 assignments[task.id] = None
                 continue
-            ri, si = best_key
-            srv = obs.cluster.regions[ri].servers[si]
-            speed = max(srv.tflops / 112.0, 0.1)
-            loads[best_key] += task.work_s / speed
-            idle[best_key] = 0
-            assignments[task.id] = (ri, si)
+            mean = loads[act].mean()
+            dl = task.work_s / speed
+            # projected deviation from mean + idle-time pressure:
+            # prefer servers that have been idle (reduces mean idle time)
+            score = np.abs(loads + dl - mean) \
+                - self.idle_weight * idle * obs.slot_seconds * 0.1
+            # cache-aware tie-break (paper §VI-C2: SDIB is cache-aware)
+            score = score - 0.5 * obs.slot_seconds * (
+                st.current_model == model_id(task.model))
+            score = np.where(eligible, score, np.inf)
+            best = int(np.argmin(score))
+            loads[best] += dl[best]
+            idle[best] = 0.0
+            ridx = int(region_of[best])
+            assignments[task.id] = (ridx, best - int(st.region_ptr[ridx]))
         return SlotDecision(assignments=assignments)

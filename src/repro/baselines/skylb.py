@@ -3,7 +3,12 @@
 Per-region local balancers prefer local processing; on saturation, spill to
 the least-loaded remote region.  A prefix-tree-style affinity map pins
 repeat (origin, model) pairs to fixed replicas to exploit cache locality —
-adapted from SkyLB's session affinity to our model-serving setting."""
+adapted from SkyLB's session affinity to our model-serving setting.
+
+Server picking is array-native over the struct-of-arrays ``SlotObs.state``:
+one vectorized load/affinity pass per candidate region instead of a Python
+loop over ``Server`` objects.
+"""
 from __future__ import annotations
 
 from typing import Dict, List, Optional, Tuple
@@ -11,6 +16,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.sim.engine import SlotDecision, SlotObs
+from repro.sim.state import ACTIVE, model_id
 from repro.sim.workload import Task
 
 
@@ -26,60 +32,66 @@ class SkyLBScheduler:
         # prefix-tree fan-out in SkyLB)
         self.affinity: Dict[Tuple[int, str], list] = {}
 
-    def _server_load(self, srv, obs) -> float:
-        return srv.queue_s / obs.slot_seconds
-
     def _pick_server(self, obs: SlotObs, ridx: int, task: Task,
                      proj=None) -> Optional[int]:
-        reg = obs.cluster.regions[ridx]
-        best, best_load = None, float("inf")
-        for i, s in enumerate(reg.servers):
-            if s.state != "active" or s.mem_gb < task.mem_gb:
-                continue
-            load = self._server_load(s, obs)
-            if proj:
-                load += proj.get((ridx, i), 0.0) / obs.slot_seconds
-            # prefer warm replicas (prefix-tree cache affinity): a cache hit
-            # is worth the whole switch pipeline (~0.5 slot)
-            if s.current_model == task.model:
-                load -= 2.0
-            elif task.model in s.warm_models:
-                load -= 0.8
-            if load < best_load:
-                best, best_load = i, load
-        return best
+        st = obs.state
+        sl = st.region_slice(ridx)
+        ok = (st.state[sl] == ACTIVE) & (st.mem_gb[sl] >= task.mem_gb)
+        if not ok.any():
+            return None
+        load = st.queue_s[sl] / obs.slot_seconds
+        if proj:
+            load = load.copy()
+            for (rj, i), v in proj.items():
+                if rj == ridx and i < load.size:
+                    load[i] += v / obs.slot_seconds
+        # prefer warm replicas (prefix-tree cache affinity): a cache hit
+        # is worth the whole switch pipeline (~0.5 slot)
+        mid = model_id(task.model)
+        cur_hit = st.current_model[sl] == mid
+        warm_hit = (st.warm_models[sl] == mid).any(axis=1) & ~cur_hit
+        load = load - 2.0 * cur_hit - 0.8 * warm_hit
+        load = np.where(ok, load, np.inf)
+        best = int(np.argmin(load))
+        return best if np.isfinite(load[best]) else None
 
     def _region_saturated(self, obs: SlotObs, ridx: int) -> bool:
-        reg = obs.cluster.regions[ridx]
-        act = reg.active_servers()
-        if not act:
+        st = obs.state
+        sl = st.region_slice(ridx)
+        act = st.state[sl] == ACTIVE
+        if not act.any():
             return True
-        mean_load = np.mean([s.queue_s for s in act]) / obs.slot_seconds
+        mean_load = float(np.mean(st.queue_s[sl][act])) / obs.slot_seconds
         return mean_load > self.spill_threshold * 4.0
 
     def schedule(self, obs: SlotObs, tasks: List[Task]) -> SlotDecision:
+        st = obs.state
         assignments = {}
-        r = obs.cluster.n_regions
+        r = st.n_regions
+        sizes = st.region_sizes()
         proj: Dict[Tuple[int, int], float] = {}
 
         def replica_load(ridx, sidx):
-            srv = obs.cluster.regions[ridx].servers[sidx]
-            return srv.queue_s + proj.get((ridx, sidx), 0.0)
+            g = st.gidx(ridx, sidx)
+            return float(st.queue_s[g]) + proj.get((ridx, sidx), 0.0)
+
+        def note_proj(ridx, sidx):
+            g = st.gidx(ridx, sidx)
+            proj[(ridx, sidx)] = proj.get((ridx, sidx), 0.0) \
+                + task.work_s / max(float(st.tflops[g]) / 112.0, 0.1)
 
         for task in tasks:
             key = (task.origin, task.model)
             # sticky replica set first — least-loaded healthy replica
             reps = self.affinity.setdefault(key, [])
             live = [(ri, si) for ri, si in reps
-                    if si < len(obs.cluster.regions[ri].servers)
-                    and obs.cluster.regions[ri].servers[si].state == "active"]
+                    if si < sizes[ri]
+                    and st.state[st.gidx(ri, si)] == ACTIVE]
             live.sort(key=lambda rs: replica_load(*rs))
             if live and replica_load(*live[0]) < 2.0 * obs.slot_seconds:
                 ridx, sidx = live[0]
                 assignments[task.id] = (ridx, sidx)
-                srv = obs.cluster.regions[ridx].servers[sidx]
-                proj[(ridx, sidx)] = proj.get((ridx, sidx), 0.0) \
-                    + task.work_s / max(srv.tflops / 112.0, 0.1)
+                note_proj(ridx, sidx)
                 continue
             # grow replica set: local-first, then by latency
             order = [task.origin] + sorted(
@@ -96,9 +108,7 @@ class SkyLBScheduler:
                 if (ridx, sidx) not in reps:
                     reps.append((ridx, sidx))
                     del reps[8:]
-                srv = obs.cluster.regions[ridx].servers[sidx]
-                proj[(ridx, sidx)] = proj.get((ridx, sidx), 0.0) \
-                    + task.work_s / max(srv.tflops / 112.0, 0.1)
+                note_proj(ridx, sidx)
                 placed = True
                 break
             if not placed:
@@ -106,5 +116,6 @@ class SkyLBScheduler:
                 loads = obs.queue_s / np.maximum(obs.capacities, 1e-9)
                 ridx = int(np.argmin(loads))
                 sidx = self._pick_server(obs, ridx, task)
-                assignments[task.id] = (ridx, sidx) if sidx is not None else None
+                assignments[task.id] = (ridx, sidx) \
+                    if sidx is not None else None
         return SlotDecision(assignments=assignments)

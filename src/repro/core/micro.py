@@ -1,26 +1,45 @@
 """Micro-level allocation (§V-C): dynamic server activation (Eq 6) + greedy
 task-server matching by compatibility score (Eqs 7-10) + task buffering.
 
-The scoring hot path is vectorized as an (N tasks x S servers) score matrix
-— the same computation implemented as the ``compat_score`` Pallas kernel for
-TPU (this numpy path is its oracle at simulator scale).
+The scoring hot path builds the full (N tasks x S servers) Eq 7-10 score
+matrix in ONE batched call per region-slot, with a pluggable backend:
+
+* ``backend="numpy"`` — float64 oracle, exact op-for-op port of the scalar
+  reference functions below (kept for tests and ``sim/reference.py``);
+* ``backend="pallas"`` — the ``kernels/compat_score`` Pallas op computes
+  the static hw+load part on accelerator (enable via
+  ``TortaScheduler(use_compat_kernel=True)``).
+
+The greedy pass then walks tasks urgency-first, applying the dynamic terms
+(projected-wait penalty, warm bonus, execution-time term) as whole-row
+vector updates — no per-task x per-server Python loop remains.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.sim.cluster import Region, Server
 from repro.sim.engine import SlotObs
+from repro.sim.state import ACTIVE, ClusterState, model_id
 from repro.sim.workload import Task
 
 W_HW, W_LOAD, W_LOC = 0.4, 0.4, 0.2      # Eq 7 weights
 W_WARM = 2.0                             # same-model (no-switch) bonus
 W_MODEL, W_EMBED = 0.7, 0.3              # Eq 10 similarity weights
 LOC_DECAY = 0.5                          # lambda in Eq 10
+
+# compute requirement proxy: task kind maps to a tflops demand (Eq 8)
+DEMAND_TFLOPS = {"compute": 200.0, "memory": 100.0, "lightweight": 60.0}
+KIND_ORDER = ("compute", "memory", "lightweight")
+_KIND_IDX = {k: i for i, k in enumerate(KIND_ORDER)}
+
+# server-feature "capacity" channel fed to the compat_score kernel: the
+# kernel computes load = exp(-4*(util+queue)/cap), so cap=4 reduces it to
+# this module's Eq 9 form exp(-(util+queue)).
+KERNEL_LOAD_CAP = 4.0
 
 
 def target_active_servers(queue_tasks: float, predicted: float,
@@ -37,17 +56,22 @@ def target_active_servers(queue_tasks: float, predicted: float,
     return int(min(n_servers, max(1, math.ceil(headroom * need))))
 
 
-def hw_compatibility(task: Task, srv: Server) -> float:
+# ---------------------------------------------------------------------------
+# scalar Eq 7-10 reference (oracle for the batched path; used by
+# sim/reference.py and the parity tests)
+# ---------------------------------------------------------------------------
+
+
+def hw_compatibility(task: Task, srv) -> float:
     """Eq 8: min(1, compute ratio) * min(1, memory ratio) * type match."""
-    # compute requirement proxy: task kind maps to a tflops demand
-    demand = {"compute": 200.0, "memory": 100.0, "lightweight": 60.0}[task.kind]
+    demand = DEMAND_TFLOPS[task.kind]
     c = min(1.0, srv.tflops / demand)
     m = min(1.0, srv.mem_gb / max(task.mem_gb, 1e-9))
     type_match = 1.0 if srv.kind == task.kind else 0.5
     return c * m * type_match
 
 
-def load_compatibility(srv: Server, slot_s: float) -> float:
+def load_compatibility(srv, slot_s: float) -> float:
     """Eq 9: exp(-(util + queue)/capacity), with the queue expressed as
     slot-time occupancy so slow/small GPUs aren't permanently discriminated
     (they must fill with lightweight tasks for the fleet to balance)."""
@@ -60,6 +84,11 @@ class RecentTask:
     model: str
     embed: Optional[np.ndarray]
     slot: int
+    # cached derived facts for the vectorized path (identical values to
+    # what the scalar path recomputes per call)
+    mid: int = -1
+    norm: float = 0.0
+    uid: int = -1                # tracker-unique id (stable cache key)
 
 
 class LocalityTracker:
@@ -68,10 +97,16 @@ class LocalityTracker:
     def __init__(self, keep: int = 4):
         self.keep = keep
         self.recent: Dict[Tuple[int, int], List[RecentTask]] = {}
+        self._uid = 0
 
     def note(self, key: Tuple[int, int], task: Task, t: int) -> None:
         lst = self.recent.setdefault(key, [])
-        lst.insert(0, RecentTask(task.model, task.embed, t))
+        norm = (np.linalg.norm(task.embed)
+                if task.embed is not None else 0.0)
+        self._uid += 1
+        lst.insert(0, RecentTask(task.model, task.embed, t,
+                                 mid=model_id(task.model), norm=norm,
+                                 uid=self._uid))
         del lst[self.keep:]
 
     def locality(self, key: Tuple[int, int], task: Task, t: int) -> float:
@@ -85,8 +120,40 @@ class LocalityTracker:
             total += sim / math.exp(LOC_DECAY * min(max(t - rt.slot, 0), 40))
         return total
 
+    def locality_column(self, key: Tuple[int, int], mids: np.ndarray,
+                        embeds: np.ndarray, norms: np.ndarray,
+                        has_embed: np.ndarray, t: int,
+                        cache: Optional[dict] = None) -> np.ndarray:
+        """Eq-10 locality of every task vs one server's history — the
+        column-vectorized form of :meth:`locality` (same accumulation
+        order).  ``cache`` memoizes per-history-entry contribution vectors
+        across calls within one slot (entries are immutable once noted, so
+        only the newest entry is ever computed fresh)."""
+        recent = self.recent.get(key)
+        n = len(mids)
+        if not recent:
+            return np.zeros(n)
+        col = np.zeros(n)
+        for rt in recent:
+            contrib = cache.get(rt.uid) if cache is not None else None
+            if contrib is None:
+                sim = W_MODEL * (mids == rt.mid).astype(np.float64)
+                if rt.embed is not None and has_embed.any():
+                    denom = norms * rt.norm
+                    ok = has_embed & (denom > 1e-9)
+                    dots = embeds @ rt.embed
+                    safe = np.where(ok, denom, 1.0)
+                    sim = sim + np.where(
+                        ok, W_EMBED * dots.astype(np.float64) / safe, 0.0)
+                contrib = sim / math.exp(
+                    LOC_DECAY * min(max(t - rt.slot, 0), 40))
+                if cache is not None:
+                    cache[rt.uid] = contrib
+            col += contrib
+        return col
 
-def score(task: Task, srv: Server, key: Tuple[int, int], t: int,
+
+def score(task: Task, srv, key: Tuple[int, int], t: int,
           slot_s: float, loc: LocalityTracker) -> float:
     """Eq 7 (+ explicit warm-model bonus: a same-model hit skips the entire
     Fig-3 switch pipeline, the single largest latency term)."""
@@ -98,12 +165,94 @@ def score(task: Task, srv: Server, key: Tuple[int, int], t: int,
             + W_WARM * warm)
 
 
-class MicroAllocator:
-    """Greedy matching within a region, urgency-first (Algorithm 1, Phase 2)."""
+# ---------------------------------------------------------------------------
+# batched scoring (the hot path)
+# ---------------------------------------------------------------------------
 
-    def __init__(self, sigma: float = 1.0, headroom: float = 2.0):
+
+def task_feature_matrix(tasks: Sequence[Task]) -> np.ndarray:
+    """(N, 8) float64: [demand_tflops, mem_gb, kind-onehot x3, 0, 0, 0]."""
+    n = len(tasks)
+    f = np.zeros((n, 8))
+    for i, t in enumerate(tasks):
+        f[i, 0] = DEMAND_TFLOPS[t.kind]
+        f[i, 1] = t.mem_gb
+        f[i, 2 + _KIND_IDX[t.kind]] = 1.0
+    return f
+
+
+def server_feature_matrix(state: ClusterState, sl: slice,
+                          slot_s: float) -> np.ndarray:
+    """(S, 8) float64: [tflops, mem_gb, kind-onehot x3, util, queue_norm,
+    KERNEL_LOAD_CAP]."""
+    s = sl.stop - sl.start
+    f = np.zeros((s, 8))
+    f[:, 0] = state.tflops[sl]
+    f[:, 1] = state.mem_gb[sl]
+    f[np.arange(s), 2 + state.kind_id[sl].astype(np.int64)] = 1.0
+    f[:, 5] = state.util[sl]
+    f[:, 6] = state.queue_s[sl] / max(slot_s, 1e-9)
+    f[:, 7] = KERNEL_LOAD_CAP
+    return f
+
+
+def hw_load_matrix_np(task_feats: np.ndarray,
+                      server_feats: np.ndarray) -> np.ndarray:
+    """(N, S) float64 W_HW*hw + W_LOAD*load — numpy oracle of the
+    ``compat_score`` kernel (zero locality), op-ordered to match the scalar
+    reference bitwise."""
+    demand = task_feats[:, 0][:, None]
+    mem_t = task_feats[:, 1][:, None]
+    tflops = server_feats[:, 0][None, :]
+    mem_s = server_feats[:, 1][None, :]
+    c = np.minimum(1.0, tflops / demand)
+    m = np.minimum(1.0, mem_s / np.maximum(mem_t, 1e-9))
+    kind_t = np.argmax(task_feats[:, 2:5], axis=1)
+    kind_s = np.argmax(server_feats[:, 2:5], axis=1)
+    type_match = np.where(kind_t[:, None] == kind_s[None, :], 1.0, 0.5)
+    hw = c * m * type_match
+    load = np.exp(-(server_feats[:, 5] + server_feats[:, 6]))[None, :]
+    return W_HW * hw + W_LOAD * load
+
+
+def hw_load_matrix(task_feats: np.ndarray, server_feats: np.ndarray, *,
+                   backend: str = "numpy",
+                   interpret: bool = True) -> np.ndarray:
+    """(N, S) W_HW*hw + W_LOAD*load via the selected backend.
+    ``backend="pallas"`` runs it through the ``compat_score`` kernel
+    (float32)."""
+    if backend == "pallas":
+        from repro.kernels.compat_score import score_matrix
+        return np.asarray(score_matrix(
+            task_feats.astype(np.float32), server_feats.astype(np.float32),
+            np.zeros((task_feats.shape[0], server_feats.shape[0]),
+                     np.float32),
+            use_pallas=True, interpret=interpret)).astype(np.float64)
+    if backend == "numpy":
+        return hw_load_matrix_np(task_feats, server_feats)
+    raise ValueError(f"unknown micro backend: {backend!r}")
+
+
+def batched_score_matrix(task_feats: np.ndarray, server_feats: np.ndarray,
+                         locality: np.ndarray, *, backend: str = "numpy",
+                         interpret: bool = True) -> np.ndarray:
+    """One (N, S) Eq 7-10 static score matrix: W_HW*hw + W_LOAD*load +
+    W_LOC*locality.  Locality is added on the host so the allocator can
+    apply within-slot locality updates as column deltas."""
+    return hw_load_matrix(task_feats, server_feats, backend=backend,
+                          interpret=interpret) + W_LOC * locality
+
+
+class MicroAllocator:
+    """Greedy matching within a region, urgency-first (Algorithm 1,
+    Phase 2), scored via one batched (N x S) matrix per region-slot."""
+
+    def __init__(self, sigma: float = 1.0, headroom: float = 2.0, *,
+                 backend: str = "numpy", interpret: bool = True):
         self.sigma = sigma
         self.headroom = headroom
+        self.backend = backend
+        self.interpret = interpret
         self.loc = LocalityTracker()
 
     def reset(self) -> None:
@@ -111,49 +260,90 @@ class MicroAllocator:
 
     def activation_target(self, obs: SlotObs, ridx: int,
                           predicted: float) -> int:
-        reg = obs.cluster.regions[ridx]
-        caps = [s.capacity for s in reg.servers]
-        avg_cap = float(np.mean(caps)) if caps else 1.0
+        st = obs.state
+        sl = st.region_slice(ridx)
+        caps = st.capacity[sl]
+        avg_cap = float(np.mean(caps)) if caps.size else 1.0
         return target_active_servers(
             float(obs.queue_tasks[ridx]), predicted, avg_cap,
-            len(reg.servers), sigma=self.sigma, headroom=self.headroom)
+            sl.stop - sl.start, sigma=self.sigma, headroom=self.headroom)
 
     def assign_region(self, obs: SlotObs, ridx: int, tasks: List[Task]
                       ) -> Dict[int, Optional[Tuple[int, int]]]:
-        reg = obs.cluster.regions[ridx]
-        active = [(i, s) for i, s in enumerate(reg.servers)
-                  if s.state == "active"]
-        out: Dict[int, Optional[Tuple[int, int]]] = {}
-        if not active:
+        st = obs.state
+        sl = st.region_slice(ridx)
+        active = st.state[sl] == ACTIVE
+        if not tasks:
+            return {}
+        if not active.any():
             return {t.id: None for t in tasks}
         # urgency (deadline) first, then resource-intensive first
-        ordered = sorted(tasks, key=lambda tk: (tk.deadline_slot, tk.model, -tk.work_s))
-        proj = {i: s.queue_s for i, s in active}
-        for task in ordered:
-            best, best_sc = None, -float("inf")
-            for i, s in active:
-                if s.mem_gb < task.mem_gb:
-                    continue
-                if proj[i] > 16.0 * obs.slot_seconds:   # capacity guard
-                    continue
-                sc = score(task, s, (ridx, i), obs.t, obs.slot_seconds,
-                           self.loc)
-                # projected wait penalty — superlinear so warm-model
-                # stickiness can never hold a backlogged server (a switch
-                # costs ~0.5 slot; waiting >1.5 slots must dominate it)
-                q_slots = proj[i] / obs.slot_seconds
-                sc -= 0.8 * q_slots + 0.4 * q_slots * q_slots
-                # execution-time term: route heavy tasks to fast silicon
-                speed_i = max(s.tflops / 112.0, 0.1)
-                sc -= 0.3 * (task.work_s / speed_i) / obs.slot_seconds
-                if sc > best_sc:
-                    best, best_sc = i, sc
-            if best is None:
+        ordered = sorted(tasks, key=lambda tk: (tk.deadline_slot, tk.model,
+                                                -tk.work_s))
+        n = len(ordered)
+        slot_s = obs.slot_seconds
+
+        # per-task arrays (sorted order)
+        mem_t = np.array([tk.mem_gb for tk in ordered])
+        work = np.array([tk.work_s for tk in ordered])
+        mids = np.array([model_id(tk.model) for tk in ordered], np.int16)
+        edim = next((tk.embed.shape[0] for tk in ordered
+                     if tk.embed is not None), 1)
+        embeds = np.stack([tk.embed if tk.embed is not None
+                           else np.zeros(edim, np.float32)
+                           for tk in ordered])
+        has_embed = np.array([tk.embed is not None for tk in ordered])
+        norms = np.linalg.norm(embeds, axis=1)
+
+        # per-server arrays (region slice)
+        mem_s = st.mem_gb[sl]
+        speed = np.maximum(st.tflops[sl] / 112.0, 0.1)
+        cur = st.current_model[sl]
+
+        # ---- the single batched (N x S) score-matrix call ----
+        tf = task_feature_matrix(ordered)
+        sf = server_feature_matrix(st, sl, slot_s)
+        loc_cache: dict = {}
+        loc0 = np.stack([self.loc.locality_column(
+            (ridx, i), mids, embeds, norms, has_embed, obs.t,
+            cache=loc_cache)
+            for i in range(sl.stop - sl.start)], axis=1)
+        hwl = hw_load_matrix(tf, sf, backend=self.backend,
+                             interpret=self.interpret)
+        base = hwl + W_LOC * loc0
+
+        warm_hit = st.warm_hit_matrix(mids, sl)
+        warm = np.where(cur[None, :] == mids[:, None], 1.0,
+                        np.where(warm_hit, 0.4, 0.0))
+        static = base + W_WARM * warm
+        exec_pen = 0.3 * (work[:, None] / speed[None, :]) / slot_s
+
+        mem_ok = mem_s[None, :] >= mem_t[:, None]
+        proj = st.queue_s[sl].astype(np.float64)
+        out: Dict[int, Optional[Tuple[int, int]]] = {}
+        for i, task in enumerate(ordered):
+            eligible = active & mem_ok[i] & (proj <= 16.0 * slot_s)
+            if not eligible.any():
                 out[task.id] = None            # buffer (§V-C2 buffering)
                 continue
-            srv = reg.servers[best]
-            speed = max(srv.tflops / 112.0, 0.1)
-            proj[best] += task.work_s / speed + srv.switch_cost_s(task.model)
+            # projected wait penalty — superlinear so warm-model stickiness
+            # can never hold a backlogged server (a switch costs ~0.5 slot;
+            # waiting >1.5 slots must dominate it)
+            q_slots = proj / slot_s
+            sc = (static[i] - (0.8 * q_slots + 0.4 * q_slots * q_slots)
+                  ) - exec_pen[i]
+            sc = np.where(eligible, sc, -np.inf)
+            best = int(np.argmax(sc))
+            g = sl.start + best
+            proj[best] += work[i] / speed[best] \
+                + st.switch_cost(g, int(mids[i]))
             self.loc.note((ridx, best), task, obs.t)
+            # within-slot locality update: refresh this server's column so
+            # later tasks see the just-placed history (linear term)
+            new_col = self.loc.locality_column(
+                (ridx, best), mids, embeds, norms, has_embed, obs.t,
+                cache=loc_cache)
+            static[:, best] = (hwl[:, best] + W_LOC * new_col) \
+                + W_WARM * warm[:, best]
             out[task.id] = (ridx, best)
         return out

@@ -30,6 +30,10 @@ class TortaScheduler:
     # Fig-12 sweep: corrupt the forecast to a target accuracy (1 = oracle-ish)
     prediction_noise: float = 0.0
     use_sinkhorn_kernel: bool = False
+    # Phase-2 scoring backend: route the batched Eq 7-10 score matrix
+    # through the compat_score Pallas kernel (mirrors use_sinkhorn_kernel)
+    use_compat_kernel: bool = False
+    kernel_interpret: bool = True
     # Phase-1 task distribution: "sample" = per-task sampling from
     # A_t[origin,:] (Algorithm 1 line 7, paper-faithful — also the better
     # performer, see EXPERIMENTS.md §Ablations); "sticky" = work-quota
@@ -43,7 +47,10 @@ class TortaScheduler:
                                     policy_params=self.policy_params,
                                     predictor=self.predictor,
                                     use_sinkhorn_kernel=self.use_sinkhorn_kernel)
-        self.micro = MicroAllocator(sigma=self.sigma, headroom=self.headroom)
+        self.micro = MicroAllocator(
+            sigma=self.sigma, headroom=self.headroom,
+            backend="pallas" if self.use_compat_kernel else "numpy",
+            interpret=self.kernel_interpret)
         self.rng = np.random.default_rng(self.seed)
         self.prediction_log = []
         self._sticky = {}
@@ -52,14 +59,18 @@ class TortaScheduler:
         self.macro.reset()
         self.micro.reset()
         self.rng = np.random.default_rng(self.seed)
+        # clear per-run state so repeated runs don't leak sticky routing or
+        # stale forecasts into prediction-accuracy metrics
+        self.prediction_log = []
+        self._sticky = {}
 
     # ------------------------------------------------------------------
 
     def schedule(self, obs: SlotObs, tasks: List[Task]) -> SlotDecision:
         r = self.n_regions
-        demand = np.zeros(r)
-        for t in tasks:
-            demand[t.origin] += 1
+        origins = np.fromiter((t.origin for t in tasks), np.int64,
+                              count=len(tasks))
+        demand = np.bincount(origins, minlength=r).astype(np.float64)
 
         q_norm = obs.queue_tasks / max(float(obs.queue_tasks.max()), 1.0)
         predicted = self.macro.predict_next(demand, obs.utilization, q_norm)
@@ -81,20 +92,27 @@ class TortaScheduler:
         # Phase 1: distribute tasks per A_t[origin, :]
         by_region: Dict[int, List[Task]] = {j: [] for j in range(r)}
         mask = obs.capacities > 0
+        by_origin: Dict[int, List[Task]] = {}
+        for task in tasks:
+            by_origin.setdefault(task.origin, []).append(task)
         if self.distribution == "sample":
-            # Algorithm 1 line 7: sample a region per task
-            for task in tasks:
-                pm = a[task.origin] * mask
+            # Algorithm 1 line 7: sample a region per task, batched per
+            # origin (every task of one origin shares the same A_t row).
+            # NOTE: the batched draw consumes the seeded RNG stream in a
+            # different order than the original per-task loop, so seeded
+            # trajectories differ from pre-array-refactor runs (still
+            # deterministic per seed; distribution is unchanged).
+            for origin, group in by_origin.items():
+                pm = a[origin] * mask
                 if pm.sum() <= 0:
                     pm = mask.astype(float)
                 if pm.sum() <= 0:
                     pm = np.ones(r)
                 pm = pm / pm.sum()
-                by_region[int(self.rng.choice(r, p=pm))].append(task)
+                js = self.rng.choice(r, size=len(group), p=pm)
+                for task, j in zip(group, js):
+                    by_region[int(j)].append(task)
             return self._phase2(obs, a, demand, predicted, by_region)
-        by_origin: Dict[int, List[Task]] = {}
-        for task in tasks:
-            by_origin.setdefault(task.origin, []).append(task)
         for origin, group in by_origin.items():
             pm = a[origin] * mask
             if pm.sum() <= 0:

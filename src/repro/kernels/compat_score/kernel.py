@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compiler_params as _compiler_params
+
 W_HW, W_LOAD, W_LOC = 0.4, 0.4, 0.2
 
 
@@ -80,7 +82,7 @@ def compat_score(task_feats: jax.Array, server_feats: jax.Array,
         ],
         out_specs=pl.BlockSpec((bn, bs), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((nn * bn, ns * bs), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(task_feats, server_feats, locality)

@@ -1,4 +1,18 @@
-"""Public wrapper for batch task-server scoring."""
+"""Public wrapper for batch task-server scoring.
+
+This is the accelerated backend of the micro layer's batched Eq 7-10
+score matrix (``core.micro.batched_score_matrix``).  Feature convention
+(shared with ``core.micro.task_feature_matrix`` /
+``server_feature_matrix``):
+
+  task rows   (N, 8): [demand_tflops, mem_gb, kind-onehot x3, 0, 0, 0]
+  server rows (S, 8): [tflops, mem_gb, kind-onehot x3, util, queue_norm,
+                       load_cap]
+
+with ``load_cap = 4.0`` so the kernel's ``exp(-4*(util+queue)/cap)``
+reduces to the scheduler's Eq-9 form ``exp(-(util+queue))``.  Enable in
+the scheduler via ``TortaScheduler(use_compat_kernel=True)``.
+"""
 from __future__ import annotations
 
 import jax

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compiler_params as _compiler_params
+
 
 def _kernel(mu_ref, nu_ref, c_ref, p_ref, *, n_iters: int, reg: float):
     mu = mu_ref[...].astype(jnp.float32)          # (bb, R)
@@ -69,7 +71,7 @@ def sinkhorn_batched(mu: jax.Array, nu: jax.Array, cost: jax.Array, *,
         ],
         out_specs=pl.BlockSpec((bb, r, r), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((nb * bb, r, r), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(mu, nu, cost)

@@ -1,0 +1,27 @@
+"""jax version-compatibility shims for the model stack.
+
+The repo targets the guide's current jax API; the pinned container ships an
+older release where ``shard_map`` still lives in ``jax.experimental`` and
+its replication-check kwarg is named ``check_rep`` instead of
+``check_vma``.  Route every call through :func:`shard_map` so both work.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:
+    from jax import shard_map as _shard_map
+except ImportError:                      # pre-promotion location
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = inspect.signature(_shard_map).parameters
+_CHECK_KW = ("check_vma" if "check_vma" in _PARAMS
+             else "check_rep" if "check_rep" in _PARAMS else None)
+
+
+def shard_map(f, **kw):
+    if "check_vma" in kw and _CHECK_KW != "check_vma":
+        val = kw.pop("check_vma")
+        if _CHECK_KW is not None:
+            kw[_CHECK_KW] = val
+    return _shard_map(f, **kw)

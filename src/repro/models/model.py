@@ -141,7 +141,7 @@ class Model:
         shard — XLA gathers the (far smaller) projection weights, and only
         the GQA-small K/V are all-gathered across sequence shards."""
         cfg, rules = self.cfg, self.rules
-        from jax import shard_map
+        from repro.models._compat import shard_map
         from repro.models.layers import apply_rope, gqa_attention
         mesh = rules.mesh
         seq = rules.seq_axis

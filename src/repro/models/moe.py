@@ -25,7 +25,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.models._compat import shard_map
 
 from repro.configs import ArchConfig, MoEConfig
 from repro.models.params import ParamDesc

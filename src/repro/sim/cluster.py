@@ -168,11 +168,14 @@ def task_profile(model: str) -> tuple:
     return work, mem, kind
 
 
-def throughput_per_slot(cluster: Cluster, slot_s: float = 45.0,
+def throughput_per_slot(cluster, slot_s: float = 45.0,
                         ref_work_s: float = 10.0) -> float:
-    """Total cluster throughput in tasks/slot (speed-adjusted)."""
-    total = 0.0
-    for reg in cluster.regions:
-        for s in reg.servers:
-            total += slot_s * (s.tflops / 112.0) / ref_work_s
-    return total
+    """Total cluster throughput in tasks/slot (speed-adjusted).
+
+    Accepts the object ``Cluster`` or the struct-of-arrays ``ClusterState``
+    (anything with a per-server ``tflops`` array)."""
+    tflops = getattr(cluster, "tflops", None)
+    if tflops is None:
+        tflops = np.array([s.tflops for reg in cluster.regions
+                           for s in reg.servers])
+    return float(np.sum(slot_s * (np.asarray(tflops) / 112.0) / ref_work_s))

@@ -1,21 +1,32 @@
 """Slotted discrete-event engine (480 slots x 45 s by default, §VI-A).
 
+Array-native: the fleet lives in a struct-of-arrays ``ClusterState`` and
+every O(servers) step — warming progression, failure masking, queue drain,
+power billing, ``SlotObs`` construction — is a whole-array operation.  Only
+the per-task assignment application remains a loop (task completions are
+sequential by definition: each task's wait depends on the queue its
+predecessors left behind).
+
 Response time = queue wait + switch overhead + compute + network (paper's
 T_completion decomposition); power is billed per region at its electricity
 price; switching is tracked both as the Frobenius allocation difference
 (the paper's theoretical C_switch) and as operational overhead (actual
 model-switch/migration/activation seconds — Fig 9's second panel).
+
+``sim/reference.py`` keeps the original object-per-server engine as the
+golden-parity oracle; ``tests/test_engine_parity.py`` pins this engine to
+it on a seeded configuration.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Protocol, Tuple
+from typing import Dict, List, Optional, Protocol, Tuple, Union
 
 import numpy as np
 
-from repro.sim.cluster import (COLD_START_S, MIGRATION_S, SWITCH_POWER_FRAC,
-                               Cluster, Region, Server)
+from repro.sim.cluster import (COLD_START_S, SWITCH_POWER_FRAC, Cluster)
 from repro.sim.metrics import MetricsAggregator
+from repro.sim.state import ACTIVE, OFF, WARMING, ClusterState, model_id
 from repro.sim.topology import Topology
 from repro.sim.workload import Task, Workload
 
@@ -32,7 +43,7 @@ class SlotObs:
     power_prices: np.ndarray         # (R,)
     prev_alloc: np.ndarray           # (R, R)
     arrivals_history: np.ndarray     # (t, R) realized arrivals so far
-    cluster: Cluster                 # full server-level visibility
+    state: ClusterState              # full server-level visibility (SoA)
     slot_seconds: float
 
 
@@ -60,14 +71,16 @@ class FailureEvent:
 
 
 class Engine:
-    def __init__(self, topology: Topology, cluster: Cluster,
+    def __init__(self, topology: Topology,
+                 cluster: Union[Cluster, ClusterState],
                  workload: Workload, scheduler, *,
                  slot_seconds: float = 45.0,
                  drop_after_slots: float = 12.0,
                  failures: Optional[List[FailureEvent]] = None,
                  seed: int = 0):
         self.topo = topology
-        self.cluster = cluster
+        self.state = (cluster if isinstance(cluster, ClusterState)
+                      else ClusterState.from_cluster(cluster))
         self.workload = workload
         self.scheduler = scheduler
         self.slot_s = slot_seconds
@@ -75,7 +88,7 @@ class Engine:
         self.failures = failures or []
         self.rng = np.random.default_rng(seed)
         self.metrics = MetricsAggregator(slot_seconds=slot_seconds)
-        r = cluster.n_regions
+        r = self.state.n_regions
         self.prev_alloc = np.full((r, r), 1.0 / r)
         self.arrivals_hist: List[np.ndarray] = []
         self.buffers: List[List[Task]] = [[] for _ in range(r)]
@@ -84,64 +97,65 @@ class Engine:
     # ------------------------------------------------------------------
 
     def _obs(self, t: int) -> SlotObs:
-        c = self.cluster
-        r = c.n_regions
-        q_s = np.array([sum(s.queue_s for s in reg.active_servers())
-                        for reg in c.regions])
+        st = self.state
+        r = st.n_regions
+        q_s = st.queue_by_region()
         q_n = np.array([len(self.buffers[i]) for i in range(r)]) + \
             q_s / np.maximum(self.slot_s, 1.0)
         hist = (np.stack(self.arrivals_hist) if self.arrivals_hist
                 else np.zeros((0, r)))
         return SlotObs(
-            t=t, latency=self.topo.latency, capacities=c.capacities(),
-            total_capacities=np.array([reg.total_capacity for reg in c.regions]),
-            queue_s=q_s, queue_tasks=q_n, utilization=c.utilizations(),
-            power_prices=c.power_prices(), prev_alloc=self.prev_alloc,
-            arrivals_history=hist, cluster=c, slot_seconds=self.slot_s)
+            t=t, latency=self.topo.latency, capacities=st.capacities(),
+            total_capacities=st.total_capacities(),
+            queue_s=q_s, queue_tasks=q_n, utilization=st.utilizations(),
+            power_prices=st.power_prices(), prev_alloc=self.prev_alloc,
+            arrivals_history=hist, state=st, slot_seconds=self.slot_s)
 
     def _apply_activation(self, targets: Dict[int, int]) -> float:
         """Activate/deactivate servers toward targets; returns activation
         overhead seconds (cold starts initiated this slot)."""
+        st = self.state
         overhead = 0.0
         for ridx, n_target in targets.items():
-            reg = self.cluster.regions[ridx]
             if ridx in self._failed:
                 continue
-            n_target = int(np.clip(n_target, 1, len(reg.servers)))
-            active = [s for s in reg.servers if s.state == "active"]
-            off = [s for s in reg.servers if s.state == "off"]
-            warming = [s for s in reg.servers if s.state == "warming"]
-            n_now = len(active) + len(warming)
+            sl = st.region_slice(ridx)
+            n_srv = sl.stop - sl.start
+            n_target = int(np.clip(n_target, 1, n_srv))
+            codes = st.state[sl]
+            active = np.flatnonzero(codes == ACTIVE)
+            off = np.flatnonzero(codes == OFF)
+            n_now = len(active) + int(np.count_nonzero(codes == WARMING))
             if n_target > n_now:
-                # wake best idle servers first (shortest cold start)
-                for s in off[:n_target - n_now]:
-                    s.state = "warming"
-                    s.warm_remaining_s = COLD_START_S
-                    overhead += COLD_START_S
+                # wake idle servers first (shortest cold start)
+                wake = off[:n_target - n_now] + sl.start
+                st.state[wake] = WARMING
+                st.warm_remaining_s[wake] = COLD_START_S
+                overhead += COLD_START_S * len(wake)
             elif n_target < len(active):
                 # deactivate lowest-utilization, longest-idle servers
-                idle_sorted = sorted(active,
-                                     key=lambda s: (s.util, -s.idle_slots))
-                for s in idle_sorted[:len(active) - n_target]:
-                    if s.queue_s <= 0:
-                        s.state = "off"
-                        s.util = 0.0
+                g = active + sl.start
+                order = g[np.lexsort((-st.idle_slots[g], st.util[g]))]
+                victims = order[:len(active) - n_target]
+                victims = victims[st.queue_s[victims] <= 0]
+                st.state[victims] = OFF
+                st.util[victims] = 0.0
         return overhead
 
     def _step_failures(self, t: int) -> None:
+        st = self.state
         for ev in self.failures:
             if ev.start_slot == t:
                 self._failed[ev.region] = ev.duration
-                for s in self.cluster.regions[ev.region].servers:
-                    s.state = "off"
-                    s.queue_s = 0.0
+                sl = st.region_slice(ev.region)
+                st.state[sl] = OFF
+                st.queue_s[sl] = 0.0
         done = []
         for ridx in self._failed:
             self._failed[ridx] -= 1
             if self._failed[ridx] <= 0:
                 done.append(ridx)
-                for s in self.cluster.regions[ridx].servers:
-                    s.state = "active"
+                st.state[st.region_slice(ridx)] = ACTIVE
         for ridx in done:
             del self._failed[ridx]
 
@@ -151,19 +165,20 @@ class Engine:
         t_total = n_slots or self.workload.n_slots
         if hasattr(self.scheduler, "reset"):
             self.scheduler.reset()
+        st = self.state
+        r = st.n_regions
         for t in range(t_total):
             self._step_failures(t)
-            # warming servers progress
-            for reg in self.cluster.regions:
-                for s in reg.servers:
-                    if s.state == "warming":
-                        s.warm_remaining_s -= self.slot_s
-                        if s.warm_remaining_s <= 0:
-                            s.state = "active"
-                            s.warm_remaining_s = 0.0
+            # warming servers progress (whole-array)
+            warming = st.state == WARMING
+            if warming.any():
+                st.warm_remaining_s[warming] -= self.slot_s
+                done = warming & (st.warm_remaining_s <= 0)
+                st.state[done] = ACTIVE
+                st.warm_remaining_s[done] = 0.0
 
-            arrivals = list(self.workload.tasks[t]) if t < len(self.workload.tasks) else []
-            r = self.cluster.n_regions
+            arrivals = (list(self.workload.tasks[t])
+                        if t < len(self.workload.tasks) else [])
             arr_vec = np.zeros(r)
             for task in arrivals:
                 arr_vec[task.origin] += 1
@@ -191,29 +206,33 @@ class Engine:
                         self.buffers[task.origin].append(task)
                     continue
                 ridx, sidx = tgt
-                reg = self.cluster.regions[ridx]
-                if ridx in self._failed or not reg.servers:
+                sl = st.region_slice(ridx)
+                n_srv = sl.stop - sl.start
+                if ridx in self._failed or n_srv == 0:
                     self.buffers[task.origin].append(task)
                     continue
-                sidx = int(np.clip(sidx, 0, len(reg.servers) - 1))
-                srv = reg.servers[sidx]
-                if srv.state != "active":
-                    cand = reg.active_servers()
-                    if not cand:
+                g = sl.start + int(np.clip(sidx, 0, n_srv - 1))
+                if st.state[g] != ACTIVE:
+                    cand = np.flatnonzero(st.state[sl] == ACTIVE)
+                    if cand.size == 0:
                         self.buffers[task.origin].append(task)
                         continue
-                    srv = min(cand, key=lambda s: s.queue_s)
-                speed = max(srv.tflops / 112.0, 0.1)     # V100 reference
-                switch_s = srv.switch_cost_s(task.model)
+                    # least-backlogged active server (first min, like the
+                    # object engine's ``min`` over servers in order)
+                    g = sl.start + int(cand[np.argmin(st.queue_s[sl][cand])])
+                speed = max(float(st.tflops[g]) / 112.0, 0.1)   # V100 ref
+                mid = model_id(task.model)
+                switch_s = st.switch_cost(g, mid)
                 if switch_s > 0:
                     n_switches += 1
-                    switch_energy_j += switch_s * srv.power_w * SWITCH_POWER_FRAC
+                    switch_energy_j += (switch_s * float(st.power_w[g])
+                                        * SWITCH_POWER_FRAC)
                     overhead_s += switch_s
-                srv.note_model(task.model)
+                st.note_model(g, mid)
                 work_s = task.work_s / speed
-                wait_s = srv.queue_s + switch_s
+                wait_s = float(st.queue_s[g]) + switch_s
                 net_s = self.topo.latency[task.origin, ridx] / 1000.0
-                srv.queue_s += switch_s + work_s
+                st.queue_s[g] += switch_s + work_s
                 self.metrics.record_completion(
                     task, t, wait_s=wait_s, work_s=work_s, net_s=net_s)
                 alloc[task.origin, ridx] += 1
@@ -225,27 +244,27 @@ class Engine:
             switch_cost_f = float(np.sum((alloc_n - self.prev_alloc) ** 2))
             self.prev_alloc = alloc_n
 
-            # drain queues + power accounting
-            utils = []
-            for reg in self.cluster.regions:
-                for s in reg.servers:
-                    if s.state != "active":
-                        continue
-                    busy = min(s.queue_s, self.slot_s)
-                    s.util = busy / self.slot_s
-                    s.idle_slots = 0 if s.util > 0.05 else s.idle_slots + 1
-                    s.queue_s = max(0.0, s.queue_s - self.slot_s)
-                    utils.append(s.util)
+            # drain queues + power accounting (whole-array)
+            act = st.active_mask()
+            busy = np.minimum(st.queue_s, self.slot_s)
+            new_util = busy / self.slot_s
+            st.util = np.where(act, new_util, st.util)
+            st.idle_slots = np.where(
+                act, np.where(st.util > 0.05, 0, st.idle_slots + 1),
+                st.idle_slots)
+            st.queue_s = np.where(
+                act, np.maximum(0.0, st.queue_s - self.slot_s), st.queue_s)
+            utils = st.util[act]
             # bill at regional prices
+            reg_j = st._segsum(np.where(
+                act, (0.1 + 0.9 * st.util) * st.power_w * self.slot_s, 0.0))
             cost = 0.0
-            for reg in self.cluster.regions:
-                reg_j = sum((0.1 + 0.9 * s.util) * s.power_w * self.slot_s
-                            for s in reg.servers if s.state == "active")
-                cost += reg_j / 3.6e6 * reg.power_price
-            cost += switch_energy_j / 3.6e6 * float(np.mean(self.cluster.power_prices()))
+            for j in range(r):                 # sequential (parity) — R small
+                cost += reg_j[j] / 3.6e6 * st.power_price[j]
+            cost += switch_energy_j / 3.6e6 * float(np.mean(st.power_price))
 
             self.metrics.record_slot(
-                t, utils=np.array(utils) if utils else np.zeros(1),
+                t, utils=utils if utils.size else np.zeros(1),
                 power_cost=cost, switch_cost=switch_cost_f,
                 overhead_s=overhead_s, n_switches=n_switches,
                 queue_tasks=float(obs.queue_tasks.sum()))

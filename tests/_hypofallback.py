@@ -1,0 +1,66 @@
+"""Minimal stand-in for ``hypothesis`` when it isn't installed.
+
+The tier-1 suite must collect (and ideally run) on a bare container that
+only ships numpy/scipy/jax/pytest.  This shim implements the tiny slice of
+the hypothesis API the tests use — ``@settings``, ``@given`` and
+``st.integers`` — by running each property deterministically on the
+strategy's corner values plus a fixed-seed random sample.  When the real
+``hypothesis`` is available (e.g. in CI via requirements-dev.txt) it is
+used instead; see the ``try: import hypothesis`` guards in the test files.
+"""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+_N_EXAMPLES = 10
+
+
+class _IntStrategy:
+    def __init__(self, min_value: int, max_value: int):
+        self.min_value = min_value
+        self.max_value = max_value
+
+    def corners(self):
+        return {self.min_value, self.max_value}
+
+    def sample(self, rng: np.random.Generator) -> int:
+        return int(rng.integers(self.min_value, self.max_value + 1))
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _IntStrategy:
+        return _IntStrategy(min_value, max_value)
+
+
+# alias so `from _hypofallback import ... strategies as st` mirrors hypothesis
+st = strategies
+
+
+def settings(*args, **kwargs):
+    """No-op decorator factory (accepts max_examples, deadline, ...)."""
+    def deco(fn):
+        return fn
+    if args and callable(args[0]) and not kwargs:
+        return args[0]
+    return deco
+
+
+def given(*strats):
+    """Run the property on corner combinations + fixed-seed random draws."""
+    def deco(fn):
+        def wrapper():
+            corner_sets = [sorted(s.corners()) for s in strats]
+            for combo in itertools.islice(itertools.product(*corner_sets),
+                                          _N_EXAMPLES):
+                fn(*combo)
+            rng = np.random.default_rng(0)
+            for _ in range(_N_EXAMPLES):
+                fn(*(s.sample(rng) for s in strats))
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.hypothesis_fallback = True
+        return wrapper
+    return deco

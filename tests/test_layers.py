@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # bare container: deterministic fallback shim
+    from _hypofallback import given, settings, strategies as st
 
 from repro.configs import MoEConfig
 from repro.models.layers import (apply_rope, gqa_attention, layernorm,

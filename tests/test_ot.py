@@ -2,7 +2,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # bare container: deterministic fallback shim
+    from _hypofallback import given, settings, strategies as st
 
 from repro.core.ot import (cost_matrix, exact_ot, normalize_masses, ot_cost,
                            routing_probs, sinkhorn)

@@ -82,5 +82,4 @@ def test_micro_respects_memory(small_world, fresh_cluster):
     tgt = out[1]
     if tgt is not None:
         _, sidx = tgt
-        srv = obs.cluster.regions[0].servers[sidx]
-        assert srv.mem_gb >= big.mem_gb
+        assert obs.state.mem_gb[obs.state.gidx(0, sidx)] >= big.mem_gb

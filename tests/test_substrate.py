@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # bare container: deterministic fallback shim
+    from _hypofallback import given, settings, strategies as st
 
 from repro.baselines.milp import make_instance, solve
 from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
