@@ -34,10 +34,16 @@ def make_schedulers(n_regions: int, extra: Optional[dict] = None):
 
 def run_matrix(*, slots: int = 120, seeds=(0,), util: float = 0.35,
                topologies=None, schedulers=None, failures=None,
+               scenario: Optional[str] = None,
                verbose: bool = True) -> Dict:
-    """Returns {topology: {scheduler: summary-dict-with-extras}}."""
+    """Returns {topology: {scheduler: summary-dict-with-extras}}.
+
+    ``scenario=None`` keeps the historical legacy diurnal workload (stable
+    figure baselines); any registered scenario name switches the matrix to
+    the streaming workload subsystem (``repro.workload.make_source``)."""
     from repro.sim import Engine, make_cluster_state, make_topology, make_workload
     from repro.sim.cluster import throughput_per_slot
+    from repro.workload import make_source
 
     out: Dict[str, Dict] = {}
     for topo_name in (topologies or TOPOLOGIES):
@@ -47,7 +53,11 @@ def run_matrix(*, slots: int = 120, seeds=(0,), util: float = 0.35,
         rate = util * throughput_per_slot(cluster0) / r
         out[topo_name] = {}
         for seed in seeds:
-            wl = make_workload(slots, r, seed=2 + seed, base_rate=rate)
+            if scenario is None:
+                wl = make_workload(slots, r, seed=2 + seed, base_rate=rate)
+            else:
+                wl = make_source(scenario, slots, r, seed=2 + seed,
+                                 base_rate=rate)
             scheds = make_schedulers(r)
             if schedulers:
                 scheds = {k: v for k, v in scheds.items() if k in schedulers}

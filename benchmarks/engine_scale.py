@@ -1,4 +1,5 @@
-"""Slot-throughput scaling: array-native engine vs per-object reference.
+"""Slot-throughput scaling: array-native engine vs per-object reference,
+plus workload-generation scaling: streaming TaskBatch vs legacy objects.
 
 Measures slots/sec for the struct-of-arrays ``sim.engine.Engine`` against
 the frozen object-per-server ``sim.reference.ReferenceEngine`` across
@@ -7,7 +8,13 @@ the full TORTA scheduler at ~35% fleet utilization.  Emits
 ``BENCH_engine_scale.json`` at the repo root so the perf trajectory is
 tracked across PRs.
 
+The workload benchmark times demand generation separately — the legacy
+per-object ``make_workload`` path against the array-native
+``StreamingWorkload`` batches at 15x200 and 25x500, plus a 1000-slot
+multi-day streaming row — and emits ``BENCH_workload_scale.json``.
+
     PYTHONPATH=src python benchmarks/engine_scale.py [--quick]
+    PYTHONPATH=src python benchmarks/engine_scale.py --workload-only
 """
 from __future__ import annotations
 
@@ -21,12 +28,20 @@ import numpy as np
 
 OUT_PATH = pathlib.Path(__file__).resolve().parent.parent \
     / "BENCH_engine_scale.json"
+WL_OUT_PATH = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_workload_scale.json"
 
 CONFIGS = [
     # (regions, servers/region, array slots, reference slots)
     (5, 50, 12, 4),
     (15, 200, 8, 2),
     (25, 500, 4, 1),
+]
+
+WL_CONFIGS = [
+    # (regions, servers/region, legacy slots, streaming slots)
+    (15, 200, 8, 64),
+    (25, 500, 4, 32),
 ]
 
 
@@ -75,29 +90,108 @@ def bench_config(r: int, spr: int, slots_new: int, slots_ref: int, *,
     return row
 
 
+def bench_workload(r: int, spr: int, slots_legacy: int,
+                   slots_stream: int, *, seed: int = 3) -> dict:
+    """Per-slot workload-generation time: legacy object path vs the
+    streaming TaskBatch path, at the same calibrated arrival rate."""
+    from repro.sim import make_cluster_state, make_workload
+    from repro.sim.cluster import throughput_per_slot
+    from repro.workload import make_source
+
+    st = make_cluster_state(r, seed=seed, servers_per_region=(spr, spr + 1))
+    rate = 0.35 * throughput_per_slot(st) / r
+
+    t0 = time.time()
+    wl = make_workload(slots_legacy, r, seed=2, base_rate=rate)
+    dt_legacy = (time.time() - t0) / slots_legacy
+    n_legacy = sum(len(ts) for ts in wl.tasks)
+
+    src = make_source("diurnal", slots_stream, r, seed=2, base_rate=rate)
+    t0 = time.time()
+    n_stream = sum(len(b) for b in src)
+    dt_stream = (time.time() - t0) / slots_stream
+
+    return {
+        "regions": r, "servers_per_region": spr,
+        "tasks_per_slot_legacy": n_legacy / slots_legacy,
+        "tasks_per_slot_stream": n_stream / slots_stream,
+        "legacy_s_per_slot": dt_legacy,
+        "stream_s_per_slot": dt_stream,
+        "speedup": dt_legacy / dt_stream,
+    }
+
+
+def bench_multiday_stream(n_slots: int = 1000, r: int = 25, *,
+                          base_rate: float = 40.0) -> dict:
+    """Streaming-only row: a 1000-slot multi-day horizon generated
+    entirely as TaskBatch arrays (the per-object path would be minutes)."""
+    from repro.workload import make_source
+
+    src = make_source("multiday", n_slots, r, seed=2, base_rate=base_rate,
+                      days=7)
+    t0 = time.time()
+    total = sum(len(b) for b in src)
+    dt = time.time() - t0
+    return {"scenario": "multiday", "slots": n_slots, "regions": r,
+            "tasks_total": total, "s_per_slot": dt / n_slots,
+            "tasks_per_s": total / max(dt, 1e-9)}
+
+
+def run_workload_bench() -> None:
+    rows = []
+    for r, spr, s_leg, s_str in WL_CONFIGS:
+        print(f"[workload_scale] {r} regions x ~{spr} servers ...",
+              flush=True)
+        row = bench_workload(r, spr, s_leg, s_str)
+        print(f"  legacy {row['legacy_s_per_slot'] * 1e3:8.1f} ms/slot"
+              f"  stream {row['stream_s_per_slot'] * 1e3:6.2f} ms/slot"
+              f"  -> {row['speedup']:.1f}x"
+              f"  (~{row['tasks_per_slot_stream']:.0f} tasks/slot)",
+              flush=True)
+        rows.append(row)
+    md = bench_multiday_stream()
+    print(f"[workload_scale] multiday 1000-slot stream: "
+          f"{md['tasks_total']} tasks at {md['tasks_per_s']:.0f} tasks/s",
+          flush=True)
+    out = {"benchmark": "workload_scale",
+           "generator": "diurnal scenario (StreamingWorkload TaskBatch)"
+                        " vs legacy make_workload",
+           "utilization": 0.35,
+           "rows": rows,
+           "multiday_stream": md}
+    WL_OUT_PATH.write_text(json.dumps(out, indent=1))
+    print(f"wrote {WL_OUT_PATH}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="skip the reference run on the largest config")
+    ap.add_argument("--workload-only", action="store_true",
+                    help="only run the workload-generation benchmark")
     args = ap.parse_args()
 
-    rows = []
-    for i, (r, spr, s_new, s_ref) in enumerate(CONFIGS):
-        run_ref = not (args.quick and i == len(CONFIGS) - 1)
-        print(f"[engine_scale] {r} regions x ~{spr} servers ...", flush=True)
-        row = bench_config(r, spr, s_new, s_ref, run_reference=run_ref)
-        spd = row.get("speedup")
-        print(f"  array {row['array_s_per_slot']:.3f} s/slot"
-              + (f"  reference {row['reference_s_per_slot']:.2f} s/slot"
-                 f"  -> {spd:.1f}x" if spd else ""), flush=True)
-        rows.append(row)
+    if not args.workload_only:
+        rows = []
+        for i, (r, spr, s_new, s_ref) in enumerate(CONFIGS):
+            run_ref = not (args.quick and i == len(CONFIGS) - 1)
+            print(f"[engine_scale] {r} regions x ~{spr} servers ...",
+                  flush=True)
+            row = bench_config(r, spr, s_new, s_ref, run_reference=run_ref)
+            spd = row.get("speedup")
+            print(f"  array {row['array_s_per_slot']:.3f} s/slot"
+                  + (f"  reference {row['reference_s_per_slot']:.2f} s/slot"
+                     f"  -> {spd:.1f}x" if spd else ""), flush=True)
+            rows.append(row)
 
-    out = {"benchmark": "engine_scale",
-           "scheduler": "TORTA (numpy micro backend)",
-           "utilization": 0.35,
-           "rows": rows}
-    OUT_PATH.write_text(json.dumps(out, indent=1))
-    print(f"wrote {OUT_PATH}")
+        out = {"benchmark": "engine_scale",
+               "scheduler": "TORTA (numpy micro backend)",
+               "utilization": 0.35,
+               "rows": rows}
+        OUT_PATH.write_text(json.dumps(out, indent=1))
+        print(f"wrote {OUT_PATH}")
+
+    run_workload_bench()
 
 
 if __name__ == "__main__":

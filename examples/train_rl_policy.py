@@ -14,9 +14,10 @@ from repro.core.ppo import PPOTrainer
 from repro.core.predictor import PredictorTrainer, make_dataset
 from repro.core.theory import estimate_k0_from_reactive
 from repro.core.torta import TortaScheduler
-from repro.sim import Engine, make_cluster_state, make_topology, make_workload
+from repro.sim import Engine, make_cluster_state, make_topology
 from repro.sim.cluster import throughput_per_slot
 from repro.sim.metrics import prediction_accuracy
+from repro.workload import make_source
 
 
 def main():
@@ -29,7 +30,10 @@ def main():
     r = topo.n_regions
     state = make_cluster_state(r, seed=3)
     rate = 0.35 * throughput_per_slot(state) / r
-    train_wl = make_workload(160, r, seed=11, base_rate=rate)
+    # multi-day streaming source: the predictor/PPO training traffic comes
+    # straight off the arrivals-matrix API, no per-task objects built
+    train_wl = make_source("multiday", 160, r, seed=11, base_rate=rate,
+                           days=3)
     traffic = train_wl.arrivals_matrix().astype(np.float32)
     cap = state.total_capacities()
     power = state.power_prices()
@@ -61,7 +65,8 @@ def main():
     print(f"[ckpt] saved to {args.ckpt}")
 
     # ---- 4. evaluate in the full simulator ----
-    eval_wl = make_workload(80, r, seed=12, base_rate=rate)
+    eval_wl = make_source("multiday", 80, r, seed=12, base_rate=rate,
+                          days=2)
     for name, sched in [
         ("TORTA(policy)", TortaScheduler(r, seed=0,
                                          policy_params=trainer.params,

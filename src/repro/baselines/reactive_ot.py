@@ -13,7 +13,7 @@ import numpy as np
 from repro.core.macro import MacroAllocator
 from repro.core.micro import MicroAllocator
 from repro.sim.engine import SlotDecision, SlotObs
-from repro.sim.workload import Task
+from repro.workload import Task
 
 
 @dataclasses.dataclass

@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.sim.engine import SlotDecision, SlotObs
 from repro.sim.state import ACTIVE
-from repro.sim.workload import Task
+from repro.workload import Task
 
 
 class RoundRobinScheduler:

@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.sim.engine import SlotDecision, SlotObs
 from repro.sim.state import ACTIVE, model_id
-from repro.sim.workload import Task
+from repro.workload import Task
 
 
 class SkyLBScheduler:

@@ -23,7 +23,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.sim.engine import SlotObs
-from repro.sim.state import ACTIVE, ClusterState, model_id
+from repro.sim.state import ACTIVE, MODEL_NAMES, ClusterState, model_id
 from repro.sim.workload import Task
 
 W_HW, W_LOAD, W_LOC = 0.4, 0.4, 0.2      # Eq 7 weights
@@ -35,6 +35,13 @@ LOC_DECAY = 0.5                          # lambda in Eq 10
 DEMAND_TFLOPS = {"compute": 200.0, "memory": 100.0, "lightweight": 60.0}
 KIND_ORDER = ("compute", "memory", "lightweight")
 _KIND_IDX = {k: i for i, k in enumerate(KIND_ORDER)}
+_DEMAND_BY_KIND = np.array([DEMAND_TFLOPS[k] for k in KIND_ORDER])
+
+# model-id -> lexicographic rank of the model name, so the batch path's
+# np.lexsort reproduces the legacy `sorted(..., key=(deadline, model,
+# -work))` ordering exactly (both sorts are stable)
+_MODEL_RANK = np.empty(len(MODEL_NAMES), np.int64)
+_MODEL_RANK[np.argsort(np.array(MODEL_NAMES))] = np.arange(len(MODEL_NAMES))
 
 # server-feature "capacity" channel fed to the compat_score kernel: the
 # kernel computes load = exp(-4*(util+queue)/cap), so cap=4 reduces it to
@@ -100,12 +107,16 @@ class LocalityTracker:
         self._uid = 0
 
     def note(self, key: Tuple[int, int], task: Task, t: int) -> None:
+        self.note_fields(key, model_id(task.model), task.embed, t)
+
+    def note_fields(self, key: Tuple[int, int], mid: int,
+                    embed: Optional[np.ndarray], t: int) -> None:
+        """Array-native ``note``: record by model id + embedding row."""
         lst = self.recent.setdefault(key, [])
-        norm = (np.linalg.norm(task.embed)
-                if task.embed is not None else 0.0)
+        norm = np.linalg.norm(embed) if embed is not None else 0.0
         self._uid += 1
-        lst.insert(0, RecentTask(task.model, task.embed, t,
-                                 mid=model_id(task.model), norm=norm,
+        lst.insert(0, RecentTask(MODEL_NAMES[mid] if mid >= 0 else None,
+                                 embed, t, mid=mid, norm=norm,
                                  uid=self._uid))
         del lst[self.keep:]
 
@@ -178,6 +189,18 @@ def task_feature_matrix(tasks: Sequence[Task]) -> np.ndarray:
         f[i, 0] = DEMAND_TFLOPS[t.kind]
         f[i, 1] = t.mem_gb
         f[i, 2 + _KIND_IDX[t.kind]] = 1.0
+    return f
+
+
+def task_feature_arrays(kind_id: np.ndarray,
+                        mem_gb: np.ndarray) -> np.ndarray:
+    """``task_feature_matrix`` from parallel arrays (no Task objects)."""
+    n = len(kind_id)
+    f = np.zeros((n, 8))
+    kid = kind_id.astype(np.int64)
+    f[:, 0] = _DEMAND_BY_KIND[kid]
+    f[:, 1] = mem_gb
+    f[np.arange(n), 2 + kid] = 1.0
     return f
 
 
@@ -270,30 +293,73 @@ class MicroAllocator:
 
     def assign_region(self, obs: SlotObs, ridx: int, tasks: List[Task]
                       ) -> Dict[int, Optional[Tuple[int, int]]]:
-        st = obs.state
-        sl = st.region_slice(ridx)
-        active = st.state[sl] == ACTIVE
+        """Object-path entry: sorts ``Task`` objects, packs them into
+        arrays, and runs the shared array core."""
         if not tasks:
             return {}
-        if not active.any():
-            return {t.id: None for t in tasks}
         # urgency (deadline) first, then resource-intensive first
         ordered = sorted(tasks, key=lambda tk: (tk.deadline_slot, tk.model,
                                                 -tk.work_s))
-        n = len(ordered)
-        slot_s = obs.slot_seconds
-
-        # per-task arrays (sorted order)
-        mem_t = np.array([tk.mem_gb for tk in ordered])
-        work = np.array([tk.work_s for tk in ordered])
-        mids = np.array([model_id(tk.model) for tk in ordered], np.int16)
         edim = next((tk.embed.shape[0] for tk in ordered
                      if tk.embed is not None), 1)
         embeds = np.stack([tk.embed if tk.embed is not None
                            else np.zeros(edim, np.float32)
                            for tk in ordered])
-        has_embed = np.array([tk.embed is not None for tk in ordered])
+        servers = self._assign_core(
+            obs, ridx,
+            mem_t=np.array([tk.mem_gb for tk in ordered]),
+            work=np.array([tk.work_s for tk in ordered]),
+            mids=np.array([model_id(tk.model) for tk in ordered], np.int16),
+            kind_ids=np.array([_KIND_IDX[tk.kind] for tk in ordered],
+                              np.int8),
+            embeds=embeds,
+            has_embed=np.array([tk.embed is not None for tk in ordered]),
+            norms=np.linalg.norm(embeds, axis=1))
+        return {tk.id: ((ridx, int(s)) if s >= 0 else None)
+                for tk, s in zip(ordered, servers)}
+
+    def assign_batch(self, obs: SlotObs, ridx: int, batch,
+                     idx: np.ndarray) -> np.ndarray:
+        """Batch-native entry: assign rows ``idx`` of a ``TaskBatch`` to
+        region ``ridx``; returns server-in-region per row of ``idx``
+        (-1 = buffer).  No Task objects are materialized."""
+        idx = np.asarray(idx)
+        if idx.size == 0:
+            return np.zeros(0, np.int32)
+        work = batch.work_s[idx]
+        # same ordering as the object path: (deadline, model name, -work)
+        order = np.lexsort((-work, _MODEL_RANK[batch.model_idx[idx]],
+                            batch.deadline_slot[idx]))
+        sidx = idx[order]
+        embeds = batch.embeds[sidx]
         norms = np.linalg.norm(embeds, axis=1)
+        servers = self._assign_core(
+            obs, ridx,
+            mem_t=batch.mem_gb[sidx], work=work[order],
+            mids=batch.model_idx[sidx].astype(np.int16),
+            kind_ids=batch.kind_id[sidx], embeds=embeds,
+            # a zero row is TaskBatch's encoding of "no embedding"
+            # (from_tasks of embed=None tasks) — match the object path
+            has_embed=norms > 0.0, norms=norms)
+        out = np.full(idx.size, -1, np.int32)
+        out[order] = servers
+        return out
+
+    def _assign_core(self, obs: SlotObs, ridx: int, *, mem_t: np.ndarray,
+                     work: np.ndarray, mids: np.ndarray,
+                     kind_ids: np.ndarray, embeds: np.ndarray,
+                     has_embed: np.ndarray,
+                     norms: np.ndarray) -> np.ndarray:
+        """Greedy walk over pre-sorted task arrays; returns per-task
+        server index within the region (-1 = buffer)."""
+        st = obs.state
+        sl = st.region_slice(ridx)
+        active = st.state[sl] == ACTIVE
+        n = len(work)
+        out = np.full(n, -1, np.int32)
+        if n == 0 or not active.any():
+            return out
+        slot_s = obs.slot_seconds
 
         # per-server arrays (region slice)
         mem_s = st.mem_gb[sl]
@@ -301,7 +367,7 @@ class MicroAllocator:
         cur = st.current_model[sl]
 
         # ---- the single batched (N x S) score-matrix call ----
-        tf = task_feature_matrix(ordered)
+        tf = task_feature_arrays(kind_ids, mem_t)
         sf = server_feature_matrix(st, sl, slot_s)
         loc_cache: dict = {}
         loc0 = np.stack([self.loc.locality_column(
@@ -320,12 +386,10 @@ class MicroAllocator:
 
         mem_ok = mem_s[None, :] >= mem_t[:, None]
         proj = st.queue_s[sl].astype(np.float64)
-        out: Dict[int, Optional[Tuple[int, int]]] = {}
-        for i, task in enumerate(ordered):
+        for i in range(n):
             eligible = active & mem_ok[i] & (proj <= 16.0 * slot_s)
             if not eligible.any():
-                out[task.id] = None            # buffer (§V-C2 buffering)
-                continue
+                continue                       # buffer (§V-C2 buffering)
             # projected wait penalty — superlinear so warm-model stickiness
             # can never hold a backlogged server (a switch costs ~0.5 slot;
             # waiting >1.5 slots must dominate it)
@@ -337,7 +401,9 @@ class MicroAllocator:
             g = sl.start + best
             proj[best] += work[i] / speed[best] \
                 + st.switch_cost(g, int(mids[i]))
-            self.loc.note((ridx, best), task, obs.t)
+            self.loc.note_fields((ridx, best), int(mids[i]),
+                                 embeds[i] if has_embed[i] else None,
+                                 obs.t)
             # within-slot locality update: refresh this server's column so
             # later tasks see the just-placed history (linear term)
             new_col = self.loc.locality_column(
@@ -345,5 +411,5 @@ class MicroAllocator:
                 cache=loc_cache)
             static[:, best] = (hwl[:, best] + W_LOC * new_col) \
                 + W_WARM * warm[:, best]
-            out[task.id] = (ridx, best)
+            out[i] = best
         return out

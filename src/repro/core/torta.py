@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.core.macro import MacroAllocator
 from repro.core.micro import MicroAllocator
-from repro.sim.engine import SlotDecision, SlotObs
+from repro.sim.engine import BatchDecision, SlotDecision, SlotObs
 from repro.sim.workload import Task
 
 
@@ -66,12 +66,17 @@ class TortaScheduler:
 
     # ------------------------------------------------------------------
 
-    def schedule(self, obs: SlotObs, tasks: List[Task]) -> SlotDecision:
-        r = self.n_regions
-        origins = np.fromiter((t.origin for t in tasks), np.int64,
-                              count=len(tasks))
-        demand = np.bincount(origins, minlength=r).astype(np.float64)
+    @property
+    def supports_batch(self) -> bool:
+        """Batch-native scheduling is available for the paper-faithful
+        per-task sampling distribution (the sticky variant is inherently
+        object-grouped)."""
+        return self.distribution == "sample"
 
+    def _macro_step(self, obs: SlotObs, demand: np.ndarray) -> np.ndarray:
+        """Shared phase-1 macro computation: predict next-slot demand,
+        corrupt it if requested, log it, and solve for A_t."""
+        r = self.n_regions
         q_norm = obs.queue_tasks / max(float(obs.queue_tasks.max()), 1.0)
         predicted = self.macro.predict_next(demand, obs.utilization, q_norm)
         if self.prediction_noise > 0:
@@ -88,6 +93,53 @@ class TortaScheduler:
             power_cost=obs.power_prices, latency=obs.latency,
             queue=obs.queue_s, utilization=obs.utilization,
             q_max=10.0 * float(cap.sum()) * obs.slot_seconds)
+        self._predicted = predicted
+        return a
+
+    def _row_probs(self, a: np.ndarray, origin: int,
+                   mask: np.ndarray) -> np.ndarray:
+        pm = a[origin] * mask
+        if pm.sum() <= 0:
+            pm = mask.astype(float)
+        if pm.sum() <= 0:
+            pm = np.ones(self.n_regions)
+        return pm / pm.sum()
+
+    def schedule_batch(self, obs: SlotObs, batch) -> BatchDecision:
+        """Batch-native Algorithm 1: phase-1 sampling and phase-2 greedy
+        matching directly over ``TaskBatch`` arrays — no Task objects."""
+        r = self.n_regions
+        n = len(batch)
+        demand = batch.origin_counts(r).astype(np.float64)
+        a = self._macro_step(obs, demand)
+        predicted = self._predicted
+
+        region_of = np.full(n, -1, np.int32)
+        mask = obs.capacities > 0
+        for origin in np.unique(batch.origin):
+            idx = np.flatnonzero(batch.origin == origin)
+            pm = self._row_probs(a, int(origin), mask)
+            region_of[idx] = self.rng.choice(r, size=idx.size, p=pm)
+
+        activation: Dict[int, int] = {}
+        server_of = np.full(n, -1, np.int32)
+        pred_inbound = self._pred_inbound(obs, a, demand, predicted)
+        for j in range(r):
+            activation[j] = self.micro.activation_target(
+                obs, j, float(pred_inbound[j]))
+            idx = np.flatnonzero(region_of == j)
+            if idx.size:
+                server_of[idx] = self.micro.assign_batch(obs, j, batch, idx)
+        return BatchDecision(region=np.where(server_of >= 0, region_of, -1),
+                             server=server_of, activation=activation)
+
+    def schedule(self, obs: SlotObs, tasks: List[Task]) -> SlotDecision:
+        r = self.n_regions
+        origins = np.fromiter((t.origin for t in tasks), np.int64,
+                              count=len(tasks))
+        demand = np.bincount(origins, minlength=r).astype(np.float64)
+        a = self._macro_step(obs, demand)
+        predicted = self._predicted
 
         # Phase 1: distribute tasks per A_t[origin, :]
         by_region: Dict[int, List[Task]] = {j: [] for j in range(r)}
@@ -103,23 +155,13 @@ class TortaScheduler:
             # trajectories differ from pre-array-refactor runs (still
             # deterministic per seed; distribution is unchanged).
             for origin, group in by_origin.items():
-                pm = a[origin] * mask
-                if pm.sum() <= 0:
-                    pm = mask.astype(float)
-                if pm.sum() <= 0:
-                    pm = np.ones(r)
-                pm = pm / pm.sum()
+                pm = self._row_probs(a, origin, mask)
                 js = self.rng.choice(r, size=len(group), p=pm)
                 for task, j in zip(group, js):
                     by_region[int(j)].append(task)
             return self._phase2(obs, a, demand, predicted, by_region)
         for origin, group in by_origin.items():
-            pm = a[origin] * mask
-            if pm.sum() <= 0:
-                pm = mask.astype(float)
-            if pm.sum() <= 0:
-                pm = np.ones(r)
-            pm = pm / pm.sum()
+            pm = self._row_probs(a, origin, mask)
             # keep same-model tasks cohesive (warm locality) but apportion
             # by WORK, greedily filling the region with the largest
             # remaining work quota — count-based chunking in a fixed order
@@ -157,23 +199,26 @@ class TortaScheduler:
 
         return self._phase2(obs, a, demand, predicted, by_region)
 
-    def _phase2(self, obs, a, demand, predicted, by_region):
-        # Phase 2: micro layer per region
-        r = self.n_regions
-        assignments: Dict[int, Optional[Tuple[int, int]]] = {}
-        activation: Dict[int, int] = {}
+    def _pred_inbound(self, obs, a, demand, predicted) -> np.ndarray:
+        """Expected next-slot inbound tasks per region under A_t, trend-
+        extrapolated: cold start spans ~2 slots but the forecast is 1 slot
+        ahead, so ramps must be pre-warmed in time."""
         total = max(demand.sum(), 1.0)
-        inbound = a.T @ demand                     # expected tasks per region
         pred_inbound = a.T @ (predicted * total)
-        # cold start spans ~2 slots but the forecast is 1 slot ahead:
-        # extrapolate the demand trend so ramps are pre-warmed in time
         hist = obs.arrivals_history
         if hist.shape[0] >= 2:
             prev_tot = max(float(hist[-2].sum()), 1.0)
             trend = float(np.clip(total / prev_tot, 1.0, 1.6))
         else:
             trend = 1.0
-        pred_inbound = pred_inbound * trend
+        return pred_inbound * trend
+
+    def _phase2(self, obs, a, demand, predicted, by_region):
+        # Phase 2: micro layer per region
+        r = self.n_regions
+        assignments: Dict[int, Optional[Tuple[int, int]]] = {}
+        activation: Dict[int, int] = {}
+        pred_inbound = self._pred_inbound(obs, a, demand, predicted)
         for j in range(r):
             activation[j] = self.micro.activation_target(
                 obs, j, float(pred_inbound[j]))

@@ -7,6 +7,14 @@ the per-task assignment application remains a loop (task completions are
 sequential by definition: each task's wait depends on the queue its
 predecessors left behind).
 
+Demand comes from any source satisfying the ``repro.workload`` contract:
+the legacy object ``Workload`` or a streaming ``StreamingWorkload``
+(scenario library / trace replay).  Arrival ingestion is vectorized per
+slot (one bincount, no per-task loop), and when the scheduler is
+batch-native (``supports_batch`` + ``schedule_batch``, e.g. TORTA's
+sampling distribution) a streaming source drives the engine entirely
+through ``TaskBatch`` arrays — per-task Python objects are never built.
+
 Response time = queue wait + switch overhead + compute + network (paper's
 T_completion decomposition); power is billed per region at its electricity
 price; switching is tracked both as the Frobenius allocation difference
@@ -55,6 +63,16 @@ class SlotDecision:
     activation: Optional[Dict[int, int]] = None
 
 
+@dataclasses.dataclass
+class BatchDecision:
+    """Array-native decision over one slot's ``TaskBatch``: parallel to
+    the batch rows; ``region[i] == -1`` buffers task ``i``."""
+
+    region: np.ndarray               # (N,) int32 target region, -1 = buffer
+    server: np.ndarray               # (N,) int32 server index within region
+    activation: Optional[Dict[int, int]] = None
+
+
 class Scheduler(Protocol):
     name: str
 
@@ -70,18 +88,29 @@ class FailureEvent:
     duration: int
 
 
+def _workload_api():
+    # local import: breaks the repro.workload <-> repro.sim import cycle
+    from repro.workload.batch import TaskBatch
+    from repro.workload.stream import as_source
+    return TaskBatch, as_source
+
+
 class Engine:
     def __init__(self, topology: Topology,
                  cluster: Union[Cluster, ClusterState],
-                 workload: Workload, scheduler, *,
+                 workload, scheduler, *,
                  slot_seconds: float = 45.0,
                  drop_after_slots: float = 12.0,
                  failures: Optional[List[FailureEvent]] = None,
-                 seed: int = 0):
+                 seed: int = 0,
+                 batch_mode: Optional[bool] = None):
+        TaskBatch, as_source = _workload_api()
+        self._TaskBatch = TaskBatch
         self.topo = topology
         self.state = (cluster if isinstance(cluster, ClusterState)
                       else ClusterState.from_cluster(cluster))
         self.workload = workload
+        self.source = as_source(workload)
         self.scheduler = scheduler
         self.slot_s = slot_seconds
         self.drop_after = drop_after_slots
@@ -92,7 +121,17 @@ class Engine:
         self.prev_alloc = np.full((r, r), 1.0 / r)
         self.arrivals_hist: List[np.ndarray] = []
         self.buffers: List[List[Task]] = [[] for _ in range(r)]
+        self.pending_batch = TaskBatch.empty()   # batch-mode buffer
         self._failed: Dict[int, int] = {}   # region -> slots remaining
+        # batch mode is opt-in for legacy object workloads (keeps seeded
+        # golden-parity trajectories byte-stable) and automatic for
+        # streaming sources when the scheduler is batch-native
+        if batch_mode is None:
+            batch_mode = (not isinstance(workload, Workload)
+                          and bool(getattr(scheduler, "supports_batch",
+                                           False))
+                          and hasattr(scheduler, "schedule_batch"))
+        self.batch_mode = bool(batch_mode)
 
     # ------------------------------------------------------------------
 
@@ -100,7 +139,8 @@ class Engine:
         st = self.state
         r = st.n_regions
         q_s = st.queue_by_region()
-        q_n = np.array([len(self.buffers[i]) for i in range(r)]) + \
+        q_n = (np.array([len(self.buffers[i]) for i in range(r)])
+               + self.pending_batch.origin_counts(r)) + \
             q_s / np.maximum(self.slot_s, 1.0)
         hist = (np.stack(self.arrivals_hist) if self.arrivals_hist
                 else np.zeros((0, r)))
@@ -159,29 +199,124 @@ class Engine:
         for ridx in done:
             del self._failed[ridx]
 
+    def _progress_warming(self) -> None:
+        """Warming servers progress toward ACTIVE (whole-array)."""
+        st = self.state
+        warming = st.state == WARMING
+        if warming.any():
+            st.warm_remaining_s[warming] -= self.slot_s
+            done = warming & (st.warm_remaining_s <= 0)
+            st.state[done] = ACTIVE
+            st.warm_remaining_s[done] = 0.0
+
+    # ------------------------------------------------------------------
+
+    def _resolve_server(self, ridx: int, sidx: int) -> int:
+        """Global index of the assignment target, falling back to the
+        least-backlogged active server; -1 when the region can't take the
+        task this slot (failed / empty / nothing active)."""
+        st = self.state
+        sl = st.region_slice(ridx)
+        n_srv = sl.stop - sl.start
+        if ridx in self._failed or n_srv == 0:
+            return -1
+        g = sl.start + int(np.clip(sidx, 0, n_srv - 1))
+        if st.state[g] != ACTIVE:
+            cand = np.flatnonzero(st.state[sl] == ACTIVE)
+            if cand.size == 0:
+                return -1
+            # least-backlogged active server (first min, like the
+            # object engine's ``min`` over servers in order)
+            g = sl.start + int(cand[np.argmin(st.queue_s[sl][cand])])
+        return g
+
+    def _apply_one(self, g: int, mid: int, work_s_raw: float, origin: int,
+                   ridx: int, t: int) -> Tuple[float, float, int]:
+        """Place one task on global server ``g``: queue/model updates +
+        completion metric.  Returns (switch energy J, switch seconds,
+        1 if a model switch happened)."""
+        st = self.state
+        speed = max(float(st.tflops[g]) / 112.0, 0.1)   # V100 ref
+        switch_s = st.switch_cost(g, mid)
+        switched = 0
+        energy_j = 0.0
+        if switch_s > 0:
+            switched = 1
+            energy_j = (switch_s * float(st.power_w[g])
+                        * SWITCH_POWER_FRAC)
+        st.note_model(g, mid)
+        work_s = work_s_raw / speed
+        wait_s = float(st.queue_s[g]) + switch_s
+        net_s = self.topo.latency[origin, ridx] / 1000.0
+        st.queue_s[g] += switch_s + work_s
+        self.metrics.record_completion(
+            None, t, wait_s=wait_s, work_s=work_s, net_s=net_s)
+        return energy_j, switch_s, switched
+
+    def _finish_slot(self, t: int, obs: SlotObs, alloc: np.ndarray,
+                     switch_energy_j: float, n_switches: int,
+                     overhead_s: float) -> None:
+        """Allocation smoothing cost, queue drain, power billing and the
+        per-slot metrics record (whole-array; shared by both run modes)."""
+        st = self.state
+        r = st.n_regions
+        # allocation matrix + theoretical switching cost
+        row = alloc.sum(1, keepdims=True)
+        alloc_n = np.where(row > 0, alloc / np.maximum(row, 1e-9),
+                           self.prev_alloc)
+        switch_cost_f = float(np.sum((alloc_n - self.prev_alloc) ** 2))
+        self.prev_alloc = alloc_n
+
+        # drain queues + power accounting (whole-array)
+        act = st.active_mask()
+        busy = np.minimum(st.queue_s, self.slot_s)
+        new_util = busy / self.slot_s
+        st.util = np.where(act, new_util, st.util)
+        st.idle_slots = np.where(
+            act, np.where(st.util > 0.05, 0, st.idle_slots + 1),
+            st.idle_slots)
+        st.queue_s = np.where(
+            act, np.maximum(0.0, st.queue_s - self.slot_s), st.queue_s)
+        utils = st.util[act]
+        # bill at regional prices
+        reg_j = st._segsum(np.where(
+            act, (0.1 + 0.9 * st.util) * st.power_w * self.slot_s, 0.0))
+        cost = 0.0
+        for j in range(r):                 # sequential (parity) — R small
+            cost += reg_j[j] / 3.6e6 * st.power_price[j]
+        cost += switch_energy_j / 3.6e6 * float(np.mean(st.power_price))
+
+        self.metrics.record_slot(
+            t, utils=utils if utils.size else np.zeros(1),
+            power_cost=cost, switch_cost=switch_cost_f,
+            overhead_s=overhead_s, n_switches=n_switches,
+            queue_tasks=float(obs.queue_tasks.sum()))
+
     # ------------------------------------------------------------------
 
     def run(self, n_slots: Optional[int] = None) -> MetricsAggregator:
-        t_total = n_slots or self.workload.n_slots
+        t_total = n_slots or self.source.n_slots
         if hasattr(self.scheduler, "reset"):
             self.scheduler.reset()
+        if self.batch_mode:
+            return self._run_batched(t_total)
+        return self._run_tasks(t_total)
+
+    def _run_tasks(self, t_total: int) -> MetricsAggregator:
+        """Object-path loop: per-task ``SlotDecision`` dicts (legacy
+        schedulers, golden-parity semantics)."""
         st = self.state
         r = st.n_regions
         for t in range(t_total):
             self._step_failures(t)
-            # warming servers progress (whole-array)
-            warming = st.state == WARMING
-            if warming.any():
-                st.warm_remaining_s[warming] -= self.slot_s
-                done = warming & (st.warm_remaining_s <= 0)
-                st.state[done] = ACTIVE
-                st.warm_remaining_s[done] = 0.0
+            self._progress_warming()
 
-            arrivals = (list(self.workload.tasks[t])
-                        if t < len(self.workload.tasks) else [])
-            arr_vec = np.zeros(r)
-            for task in arrivals:
-                arr_vec[task.origin] += 1
+            arrivals = (self.source.slot_tasks(t)
+                        if t < self.source.n_slots else [])
+            arr_vec = np.bincount(
+                np.fromiter((task.origin for task in arrivals), np.int64,
+                            count=len(arrivals)),
+                minlength=r)[:r].astype(np.float64)
             self.arrivals_hist.append(arr_vec)
             # buffered tasks get first chance
             tasks = [tk for b in self.buffers for tk in b] + arrivals
@@ -206,66 +341,83 @@ class Engine:
                         self.buffers[task.origin].append(task)
                     continue
                 ridx, sidx = tgt
-                sl = st.region_slice(ridx)
-                n_srv = sl.stop - sl.start
-                if ridx in self._failed or n_srv == 0:
+                g = self._resolve_server(ridx, sidx)
+                if g < 0:
                     self.buffers[task.origin].append(task)
                     continue
-                g = sl.start + int(np.clip(sidx, 0, n_srv - 1))
-                if st.state[g] != ACTIVE:
-                    cand = np.flatnonzero(st.state[sl] == ACTIVE)
-                    if cand.size == 0:
-                        self.buffers[task.origin].append(task)
-                        continue
-                    # least-backlogged active server (first min, like the
-                    # object engine's ``min`` over servers in order)
-                    g = sl.start + int(cand[np.argmin(st.queue_s[sl][cand])])
-                speed = max(float(st.tflops[g]) / 112.0, 0.1)   # V100 ref
-                mid = model_id(task.model)
-                switch_s = st.switch_cost(g, mid)
-                if switch_s > 0:
-                    n_switches += 1
-                    switch_energy_j += (switch_s * float(st.power_w[g])
-                                        * SWITCH_POWER_FRAC)
-                    overhead_s += switch_s
-                st.note_model(g, mid)
-                work_s = task.work_s / speed
-                wait_s = float(st.queue_s[g]) + switch_s
-                net_s = self.topo.latency[task.origin, ridx] / 1000.0
-                st.queue_s[g] += switch_s + work_s
-                self.metrics.record_completion(
-                    task, t, wait_s=wait_s, work_s=work_s, net_s=net_s)
+                energy_j, switch_s, switched = self._apply_one(
+                    g, model_id(task.model), task.work_s, task.origin,
+                    ridx, t)
+                switch_energy_j += energy_j
+                overhead_s += switch_s
+                n_switches += switched
                 alloc[task.origin, ridx] += 1
 
-            # allocation matrix + theoretical switching cost
-            row = alloc.sum(1, keepdims=True)
-            alloc_n = np.where(row > 0, alloc / np.maximum(row, 1e-9),
-                               self.prev_alloc)
-            switch_cost_f = float(np.sum((alloc_n - self.prev_alloc) ** 2))
-            self.prev_alloc = alloc_n
+            self._finish_slot(t, obs, alloc, switch_energy_j, n_switches,
+                              overhead_s)
+        return self.metrics
 
-            # drain queues + power accounting (whole-array)
-            act = st.active_mask()
-            busy = np.minimum(st.queue_s, self.slot_s)
-            new_util = busy / self.slot_s
-            st.util = np.where(act, new_util, st.util)
-            st.idle_slots = np.where(
-                act, np.where(st.util > 0.05, 0, st.idle_slots + 1),
-                st.idle_slots)
-            st.queue_s = np.where(
-                act, np.maximum(0.0, st.queue_s - self.slot_s), st.queue_s)
-            utils = st.util[act]
-            # bill at regional prices
-            reg_j = st._segsum(np.where(
-                act, (0.1 + 0.9 * st.util) * st.power_w * self.slot_s, 0.0))
-            cost = 0.0
-            for j in range(r):                 # sequential (parity) — R small
-                cost += reg_j[j] / 3.6e6 * st.power_price[j]
-            cost += switch_energy_j / 3.6e6 * float(np.mean(st.power_price))
+    def _run_batched(self, t_total: int) -> MetricsAggregator:
+        """Array-path loop: ``TaskBatch`` in, ``BatchDecision`` out — no
+        per-task Python objects anywhere in the slot cycle."""
+        TaskBatch = self._TaskBatch
+        st = self.state
+        r = st.n_regions
+        src = self.source
+        for t in range(t_total):
+            self._step_failures(t)
+            self._progress_warming()
 
-            self.metrics.record_slot(
-                t, utils=utils if utils.size else np.zeros(1),
-                power_cost=cost, switch_cost=switch_cost_f,
-                overhead_s=overhead_s, n_switches=n_switches,
-                queue_tasks=float(obs.queue_tasks.sum()))
+            new = (src.slot_batch(t) if t < src.n_slots
+                   else TaskBatch.empty())
+            self.arrivals_hist.append(
+                new.origin_counts(r).astype(np.float64))
+            # buffered tasks get first chance
+            batch = TaskBatch.concat(self.pending_batch, new)
+            self.pending_batch = TaskBatch.empty()
+
+            obs = self._obs(t)
+            decision = self.scheduler.schedule_batch(obs, batch)
+            overhead_s = 0.0
+            if decision.activation:
+                overhead_s += self._apply_activation(decision.activation)
+
+            alloc = np.zeros((r, r))
+            switch_energy_j = 0.0
+            n_switches = 0
+            n = len(batch)
+            assigned = np.zeros(n, bool)
+            resolve_failed = np.zeros(n, bool)
+            for i in range(n):
+                ridx = int(decision.region[i])
+                if ridx < 0:
+                    continue
+                g = self._resolve_server(ridx, int(decision.server[i]))
+                if g < 0:
+                    resolve_failed[i] = True
+                    continue
+                energy_j, switch_s, switched = self._apply_one(
+                    g, int(batch.model_idx[i]), float(batch.work_s[i]),
+                    int(batch.origin[i]), ridx, t)
+                switch_energy_j += energy_j
+                overhead_s += switch_s
+                n_switches += switched
+                alloc[batch.origin[i], ridx] += 1
+                assigned[i] = True
+
+            # unassigned rows: scheduler-buffered tasks age out exactly
+            # like the object path's per-task check; tasks whose resolved
+            # region couldn't take them (failed/empty) are always
+            # re-buffered, also matching the object path
+            left = np.flatnonzero(~assigned)
+            if left.size:
+                too_old = ((t - batch.arrival_slot[left])
+                           >= self.drop_after) & ~resolve_failed[left]
+                n_drop = int(np.count_nonzero(too_old))
+                if n_drop:
+                    self.metrics.record_drops(n_drop, t)
+                self.pending_batch = batch.select(left[~too_old])
+
+            self._finish_slot(t, obs, alloc, switch_energy_j, n_switches,
+                              overhead_s)
         return self.metrics

@@ -59,6 +59,10 @@ class MetricsAggregator:
     def record_drop(self, task, t: int) -> None:
         self.dropped += 1
 
+    def record_drops(self, n: int, t: int) -> None:
+        """Bulk drop record for the array-native engine path."""
+        self.dropped += int(n)
+
     def record_slot(self, t: int, *, utils: np.ndarray, power_cost: float,
                     switch_cost: float, overhead_s: float, n_switches: int,
                     queue_tasks: float) -> None:

@@ -195,9 +195,12 @@ class ReferenceEngine:
                  drop_after_slots: float = 12.0,
                  failures: Optional[list] = None,
                  seed: int = 0):
+        # thin adapter: streaming sources are materialized into the
+        # legacy object Workload this frozen engine iterates
+        from repro.workload.stream import to_legacy_workload
         self.topo = topology
         self.cluster = cluster
-        self.workload = workload
+        self.workload = to_legacy_workload(workload)
         self.scheduler = scheduler
         self.slot_s = slot_seconds
         self.drop_after = drop_after_slots

@@ -1,95 +1,13 @@
-"""Workload generation: diurnal traffic with surges + task sampling.
+"""Compat shim — the workload subsystem moved to ``repro.workload``.
 
-Traffic is region-phased (time zones), giving the predictable periodic
-patterns that motivate temporal-aware scheduling (paper Fig 2); optional
-surge events reproduce the reactive-scheduler queue spikes.
+Existing imports (``repro.sim.workload.Task`` etc.) keep working; the
+legacy object implementation lives in ``repro.workload.legacy`` (same
+seeded RNG draw order as the original module, with a vectorized
+``arrivals_matrix``), and the array-native subsystem — ``TaskBatch``,
+``StreamingWorkload``, the scenario registry, trace replay — in the rest
+of the ``repro.workload`` package.
 """
-from __future__ import annotations
+from repro.workload.legacy import (Task, Workload, generate_traffic,
+                                   make_workload)
 
-import dataclasses
-from typing import Dict, List, Optional, Sequence
-
-import numpy as np
-
-from repro.sim.cluster import MODEL_CATALOG, task_profile
-
-
-@dataclasses.dataclass
-class Task:
-    id: int
-    origin: int                  # region index
-    model: str
-    kind: str                    # compute | memory | lightweight
-    work_s: float                # gpu-seconds on V100-class reference
-    mem_gb: float
-    deadline_slot: int
-    arrival_slot: int
-    embed: Optional[np.ndarray] = None   # input embedding (locality, Eq 10)
-
-
-def generate_traffic(n_slots: int, n_regions: int, seed: int = 0, *,
-                     base_rate: float = 6.0, diurnal_amp: float = 0.6,
-                     noise: float = 0.15, surges: int = 2,
-                     surge_scale: float = 2.5) -> np.ndarray:
-    """(T, R) expected arrivals per slot.  One simulated 'day' spans the
-    whole horizon; regions get phase offsets like time zones."""
-    rng = np.random.default_rng(seed)
-    t = np.arange(n_slots)[:, None] / max(n_slots, 1)
-    phase = rng.uniform(0, 2 * np.pi, n_regions)[None, :]
-    weight = rng.dirichlet(np.ones(n_regions) * 2.0) * n_regions
-    wave = 1.0 + diurnal_amp * np.sin(2 * np.pi * t * 2 + phase)
-    traffic = base_rate * weight[None, :] * wave
-    traffic *= 1.0 + noise * rng.standard_normal((n_slots, n_regions))
-    for _ in range(surges):
-        s0 = int(rng.integers(n_slots // 8, max(n_slots - n_slots // 8, n_slots // 8 + 1)))
-        dur = int(rng.integers(max(n_slots // 48, 2), max(n_slots // 16, 3)))
-        reg = int(rng.integers(n_regions))
-        traffic[s0:s0 + dur, reg] *= surge_scale
-    return np.maximum(traffic, 0.1)
-
-
-@dataclasses.dataclass
-class Workload:
-    traffic: np.ndarray          # (T, R) expected arrivals
-    tasks: List[List[Task]]      # per slot
-
-    @property
-    def n_slots(self) -> int:
-        return self.traffic.shape[0]
-
-    def arrivals_matrix(self) -> np.ndarray:
-        t, r = self.traffic.shape
-        out = np.zeros((t, r))
-        for s, ts in enumerate(self.tasks):
-            for task in ts:
-                out[s, task.origin] += 1
-        return out
-
-
-def make_workload(n_slots: int, n_regions: int, seed: int = 0,
-                  **traffic_kw) -> Workload:
-    rng = np.random.default_rng(seed + 1)
-    traffic = generate_traffic(n_slots, n_regions, seed, **traffic_kw)
-    models = list(MODEL_CATALOG)
-    # zipf-ish popularity over served models
-    pop = 1.0 / np.arange(1, len(models) + 1) ** 1.4
-    pop /= pop.sum()
-    tasks: List[List[Task]] = []
-    tid = 0
-    for t in range(n_slots):
-        slot_tasks = []
-        counts = rng.poisson(traffic[t])
-        for r, c in enumerate(counts):
-            for _ in range(int(c)):
-                model = models[int(rng.choice(len(models), p=pop))]
-                work, mem, kind = task_profile(model)
-                work *= float(rng.uniform(0.5, 1.5))   # paper: uniform dist
-                slot_tasks.append(Task(
-                    id=tid, origin=r, model=model, kind=kind,
-                    work_s=work, mem_gb=mem,
-                    deadline_slot=t + int(rng.integers(2, 10)),
-                    arrival_slot=t,
-                    embed=rng.standard_normal(8).astype(np.float32)))
-                tid += 1
-        tasks.append(slot_tasks)
-    return Workload(traffic=traffic, tasks=tasks)
+__all__ = ["Task", "Workload", "generate_traffic", "make_workload"]

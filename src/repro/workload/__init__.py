@@ -1,0 +1,27 @@
+"""Array-native workload subsystem.
+
+The system's demand source: struct-of-arrays ``TaskBatch`` streaming
+(``stream.StreamingWorkload``), a scenario registry (``get_scenario``)
+covering diurnal / multi-day / flash-crowd / outage / trace-replay
+regimes, and the legacy object path (``legacy.Task``/``Workload``) kept
+for golden parity.  ``repro.sim.workload`` re-exports the legacy names
+as a compat shim.
+"""
+from repro.workload.batch import (EMBED_DIM, MODEL_KIND_ID, MODEL_MEM_GB,
+                                  MODEL_WORK_S, TaskBatch, zipf_model_mix)
+from repro.workload.legacy import (Task, Workload, generate_traffic,
+                                   make_workload)
+from repro.workload.stream import (LegacySource, StreamingWorkload,
+                                   as_source, to_legacy_workload)
+from repro.workload.trace import DEFAULT_TRACE, load_trace, resample_trace
+from repro.workload.scenarios import (get_scenario, list_scenarios,
+                                      make_source, register_scenario)
+
+__all__ = [
+    "EMBED_DIM", "MODEL_KIND_ID", "MODEL_MEM_GB", "MODEL_WORK_S",
+    "TaskBatch", "zipf_model_mix",
+    "Task", "Workload", "generate_traffic", "make_workload",
+    "LegacySource", "StreamingWorkload", "as_source", "to_legacy_workload",
+    "DEFAULT_TRACE", "load_trace", "resample_trace",
+    "get_scenario", "list_scenarios", "make_source", "register_scenario",
+]

@@ -1,0 +1,306 @@
+"""Workload subsystem: scenario determinism + conservation, TaskBatch
+adapter parity, trace replay, and the streaming batch-native engine path."""
+import pathlib
+
+import networkx as nx
+import numpy as np
+import pytest
+
+from repro.core.torta import TortaScheduler
+from repro.sim import Engine, make_cluster_state
+from repro.sim.cluster import MODEL_CATALOG, task_profile
+from repro.sim.state import KINDS, MODEL_NAMES
+from repro.sim.topology import Topology
+from repro.workload import (DEFAULT_TRACE, StreamingWorkload, TaskBatch,
+                            Workload, generate_traffic, get_scenario,
+                            list_scenarios, load_trace, make_source,
+                            make_workload, resample_trace,
+                            to_legacy_workload)
+
+FIXTURE_TRACE = pathlib.Path(__file__).resolve().parent / "data" \
+    / "fixture_trace.csv"
+
+# per-scenario kwargs for the generic property tests
+SCENARIO_KW = {"trace_replay": {"path": FIXTURE_TRACE},
+               "multiday": {"days": 2}}
+
+_BATCH_FIELDS = ("ids", "origin", "model_idx", "kind_id", "work_s",
+                 "mem_gb", "deadline_slot", "arrival_slot", "embeds")
+
+
+def _small_topology(r: int, seed: int = 0) -> Topology:
+    rng = np.random.default_rng(seed)
+    lat = rng.uniform(10, 80, (r, r))
+    lat = (lat + lat.T) / 2
+    np.fill_diagonal(lat, 0.0)
+    return Topology(name=f"synth{r}", n_regions=r, bandwidth_gbps=10,
+                    latency=lat, graph=nx.cycle_graph(r))
+
+
+def _assert_batches_equal(a: TaskBatch, b: TaskBatch) -> None:
+    for f in _BATCH_FIELDS:
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f), err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# registry-wide property tests
+# ---------------------------------------------------------------------------
+
+
+def test_registry_exposes_required_scenarios():
+    names = list_scenarios()
+    assert len(names) >= 5
+    for required in ("diurnal", "multiday", "flash_crowd",
+                     "regional_outage", "trace_replay"):
+        assert required in names
+        assert callable(get_scenario(required))
+    with pytest.raises(KeyError):
+        get_scenario("no-such-scenario")
+
+
+@pytest.mark.parametrize("name", list_scenarios())
+def test_scenario_seeded_determinism(name):
+    kw = SCENARIO_KW.get(name, {})
+    a = make_source(name, 40, 4, seed=7, base_rate=4.0, **kw)
+    b = make_source(name, 40, 4, seed=7, base_rate=4.0, **kw)
+    assert a.traffic.shape == (40, 4)
+    np.testing.assert_array_equal(a.traffic, b.traffic)
+    for t in (0, 13, 39):
+        _assert_batches_equal(a.slot_batch(t), b.slot_batch(t))
+    # a different seed perturbs the realized stream
+    c = make_source(name, 40, 4, seed=8, base_rate=4.0, **kw)
+    assert int(c.arrivals_matrix().sum()) != int(a.arrivals_matrix().sum()) \
+        or not np.array_equal(c.slot_batch(0).work_s, a.slot_batch(0).work_s)
+
+
+@pytest.mark.parametrize("name", list_scenarios())
+def test_scenario_arrival_conservation(name):
+    kw = SCENARIO_KW.get(name, {})
+    src = make_source(name, 48, 4, seed=3, base_rate=4.0, **kw)
+    assert np.all(src.traffic >= 0)
+    am = src.arrivals_matrix()
+    streamed = np.stack([b.origin_counts(4) for b in src]).astype(float)
+    # counts replay == streamed batches, slot by slot, region by region
+    np.testing.assert_array_equal(am, streamed)
+    # realized Poisson volume tracks the expectation (6-sigma envelope)
+    expect = src.traffic.sum()
+    assert abs(am.sum() - expect) < 6.0 * np.sqrt(expect) + 10.0
+    # every batch is internally consistent
+    b = src.slot_batch(5)
+    assert len(b) == int(am[5].sum())
+    if len(b):
+        assert np.all(b.arrival_slot == 5)
+        assert np.all(b.deadline_slot > b.arrival_slot)
+        assert np.all(b.work_s > 0) and np.all(b.mem_gb > 0)
+        assert b.embeds.shape == (len(b), src.embed_dim)
+
+
+def test_regional_outage_conserves_and_fails_over():
+    plain = generate_traffic(60, 4, 9, base_rate=5.0)
+    src = make_source("regional_outage", 60, 4, seed=9, base_rate=5.0,
+                      outage_region=1, outage_start_frac=0.4,
+                      outage_duration_frac=0.25, ramp_slots=2)
+    # per-slot totals conserved: demand fails over, it is not lost
+    np.testing.assert_allclose(src.traffic.sum(1), plain.sum(1), rtol=1e-9)
+    s0, s1 = int(0.4 * 60), int(0.4 * 60) + 15
+    mid = slice(s0 + 2, s1)            # past the ramp
+    assert src.traffic[mid, 1].max() < 0.05 * plain[mid, 1].min() + 1e-9
+    others = [0, 2, 3]
+    assert np.all(src.traffic[mid][:, others].sum(1)
+                  > plain[mid][:, others].sum(1))
+    # outside the window the matrix is untouched
+    np.testing.assert_array_equal(src.traffic[:s0], plain[:s0])
+    np.testing.assert_array_equal(src.traffic[s1:], plain[s1:])
+
+
+def test_flash_crowd_bursts_are_heavy():
+    src = make_source("flash_crowd", 200, 4, seed=11, base_rate=4.0)
+    base = make_source("flash_crowd", 200, 4, seed=11, base_rate=4.0,
+                       burst_rate=0.0)
+    ratio = src.traffic / base.traffic
+    assert ratio.max() > 2.0            # at least one real burst landed
+    assert np.all(ratio >= 1.0 - 1e-12)  # bursts only ever add demand
+
+
+# ---------------------------------------------------------------------------
+# adapters
+# ---------------------------------------------------------------------------
+
+
+def test_taskbatch_legacy_task_roundtrip():
+    src = make_source("diurnal", 6, 3, seed=1, base_rate=6.0)
+    batch = TaskBatch.concat(*[src.slot_batch(t) for t in range(6)])
+    assert len(batch) > 0
+    tasks = batch.to_tasks()
+    for i, task in enumerate(tasks[:50]):
+        assert task.model == MODEL_NAMES[batch.model_idx[i]]
+        assert task.kind == KINDS[batch.kind_id[i]]
+        work, mem, kind = task_profile(task.model)
+        assert task.mem_gb == mem and task.kind == kind
+        assert 0.5 * work <= task.work_s <= 1.5 * work
+    back = TaskBatch.from_tasks(tasks)
+    _assert_batches_equal(batch, back)
+
+
+def test_streaming_materialize_matches_stream():
+    src = make_source("multiday", 8, 3, seed=4, base_rate=3.0, days=2)
+    wl = to_legacy_workload(src)
+    assert isinstance(wl, Workload)
+    np.testing.assert_array_equal(wl.arrivals_matrix(),
+                                  src.arrivals_matrix())
+    for t in (0, 3, 7):
+        _assert_batches_equal(TaskBatch.from_tasks(wl.tasks[t]),
+                              src.slot_batch(t))
+
+
+def test_legacy_arrivals_matrix_vectorization():
+    wl = make_workload(12, 4, seed=3, base_rate=4.0)
+    got = wl.arrivals_matrix()
+    want = np.zeros((12, 4))
+    for s, ts in enumerate(wl.tasks):         # the historical double loop
+        for task in ts:
+            want[s, task.origin] += 1
+    np.testing.assert_array_equal(got, want)
+
+
+def test_generate_traffic_multiplicative_noise_clamp():
+    # a huge noise setting used to flip expected arrivals negative and let
+    # the final floor flatten surge shapes; the multiplicative clamp keeps
+    # every draw a positive modulation
+    tr = generate_traffic(64, 5, seed=0, noise=5.0)
+    assert np.all(tr > 0)
+    np.testing.assert_array_equal(tr, generate_traffic(64, 5, seed=0,
+                                                       noise=5.0))
+    # default-noise seeded traffic is numerically unchanged by the clamp
+    # (the clamp needs a -6.3 sigma draw to engage at noise=0.15): the
+    # generator keeps matching its historical statistics
+    tr0 = generate_traffic(480, 6, seed=2)
+    assert np.all(tr0 >= 0.1)
+    assert 0.5 < tr0.mean() / 6.0 < 2.0
+
+
+# ---------------------------------------------------------------------------
+# trace replay
+# ---------------------------------------------------------------------------
+
+
+def test_load_trace_csv_and_json():
+    arr, meta = load_trace(FIXTURE_TRACE)
+    assert arr.shape == (24, 4) and np.all(arr >= 0)
+    arr2, meta2 = load_trace(DEFAULT_TRACE)
+    assert arr2.shape[1] == 4 and "model_mix" in meta2
+    assert len(meta2["model_mix"]) == len(MODEL_CATALOG)
+
+
+def test_resample_trace_preserves_slot_totals():
+    arr, _ = load_trace(FIXTURE_TRACE)
+    same = resample_trace(arr, 24, 4)
+    np.testing.assert_array_equal(same, arr)
+    folded = resample_trace(arr, 24, 3)       # 4 regions -> 3
+    np.testing.assert_allclose(folded.sum(1), arr.sum(1), rtol=1e-12)
+    split = resample_trace(arr, 24, 9)        # 4 regions -> 9
+    np.testing.assert_allclose(split.sum(1), arr.sum(1), rtol=1e-12)
+    stretched = resample_trace(arr, 60, 4)    # time interpolation
+    assert stretched.shape == (60, 4)
+    assert abs(stretched.mean() - arr.mean()) < 0.25 * arr.mean()
+
+
+def test_trace_replay_scenario_uses_trace_shape():
+    src = make_source("trace_replay", 24, 4, seed=0, path=FIXTURE_TRACE)
+    arr, _ = load_trace(FIXTURE_TRACE)
+    np.testing.assert_allclose(src.traffic, np.maximum(arr, 1e-3))
+    # base_rate recalibration preserves the temporal shape
+    scaled = make_source("trace_replay", 24, 4, seed=0, path=FIXTURE_TRACE,
+                         base_rate=8.0)
+    assert scaled.traffic.mean() == pytest.approx(8.0)
+    np.testing.assert_allclose(scaled.traffic / scaled.traffic.mean(),
+                               src.traffic / src.traffic.mean(), rtol=1e-9)
+    # default bundled trace carries its own model mix
+    bundled = make_source("trace_replay", 48, 4, seed=0)
+    assert not np.allclose(bundled.model_mix,
+                           make_source("diurnal", 4, 4, seed=0).model_mix)
+
+
+def test_engine_e2e_trace_replay_smoke():
+    """Engine end-to-end on trace_replay: batch-native TORTA completes the
+    replayed demand and conserves every task."""
+    r = 4
+    topo = _small_topology(r)
+    st = make_cluster_state(r, seed=3)
+    src = make_source("trace_replay", 24, r, seed=5, path=FIXTURE_TRACE,
+                      base_rate=6.0)
+    eng = Engine(topo, st, src, TortaScheduler(r, seed=0), seed=4)
+    assert eng.batch_mode
+    s = eng.run().summary()
+    arrived = int(src.arrivals_matrix().sum())
+    assert s["completed"] + s["dropped"] + len(eng.pending_batch) == arrived
+    assert s["completion_rate"] > 0.7
+    assert s["mean_response_s"] > 0 and s["power_cost_total"] > 0
+
+
+# ---------------------------------------------------------------------------
+# streaming engine path
+# ---------------------------------------------------------------------------
+
+
+def test_batch_mode_never_materializes_tasks(monkeypatch):
+    """The streaming batch path must complete a run without ever building
+    a legacy Task object."""
+    r = 4
+    topo = _small_topology(r)
+    st = make_cluster_state(r, seed=3)
+    src = make_source("multiday", 30, r, seed=2, base_rate=3.0, days=2)
+    eng = Engine(topo, st, src, TortaScheduler(r, seed=0), seed=4)
+    assert eng.batch_mode
+
+    def _boom(self):
+        raise AssertionError("Task objects materialized in batch mode")
+
+    monkeypatch.setattr(TaskBatch, "to_tasks", _boom)
+    import repro.workload.legacy as legacy
+
+    def _boom_init(self, *a, **kw):
+        raise AssertionError("legacy Task constructed in batch mode")
+
+    monkeypatch.setattr(legacy.Task, "__init__", _boom_init)
+    s = eng.run().summary()
+    arrived = int(src.arrivals_matrix().sum())
+    assert s["completed"] + s["dropped"] + len(eng.pending_batch) == arrived
+    assert s["completed"] > 0
+
+
+def test_batch_and_task_modes_agree_statistically():
+    """Forced task-mode and batch-mode runs of the same streaming source
+    are distinct seeded trajectories of the same system — headline
+    metrics must land in the same regime."""
+    r = 4
+    topo = _small_topology(r)
+    st = make_cluster_state(r, seed=3)
+    src = make_source("diurnal", 30, r, seed=2, base_rate=4.0)
+    s_batch = Engine(topo, st.copy(), src, TortaScheduler(r, seed=0),
+                     seed=4).run().summary()
+    s_task = Engine(topo, st.copy(), src, TortaScheduler(r, seed=0),
+                    seed=4, batch_mode=False).run().summary()
+    assert s_batch["completion_rate"] > 0.85
+    assert s_task["completion_rate"] > 0.85
+    assert s_batch["completed"] == pytest.approx(s_task["completed"],
+                                                 rel=0.1)
+    assert s_batch["mean_response_s"] == pytest.approx(
+        s_task["mean_response_s"], rel=0.5)
+
+
+def test_thousand_slot_multiday_stream():
+    """A 1000-slot multi-day horizon streams entirely through TaskBatch
+    arrays (slot-local generation, no cross-slot state, no Task objects)."""
+    src = make_source("multiday", 1000, 6, seed=1, base_rate=2.0, days=7)
+    assert src.n_slots == 1000
+    total = 0
+    peak = 0
+    for batch in src:
+        total += len(batch)
+        peak = max(peak, len(batch))
+        assert isinstance(batch, TaskBatch)
+    assert total > 5000
+    assert peak < 40 * 6 * 4      # sanity: rate stayed calibrated
+    # arbitrary-slot access is identical to streaming (no hidden state)
+    _assert_batches_equal(src.slot_batch(777), src.slot_batch(777))
