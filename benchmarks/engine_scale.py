@@ -1,5 +1,7 @@
 """Slot-throughput scaling: array-native engine vs per-object reference,
-plus workload-generation scaling: streaming TaskBatch vs legacy objects.
+plus workload-generation scaling: streaming TaskBatch vs legacy objects,
+plus baseline-scheduler throughput: native ``schedule_batch`` vs the
+``LegacySchedulerAdapter`` object path.
 
 Measures slots/sec for the struct-of-arrays ``sim.engine.Engine`` against
 the frozen object-per-server ``sim.reference.ReferenceEngine`` across
@@ -13,8 +15,15 @@ per-object ``make_workload`` path against the array-native
 ``StreamingWorkload`` batches at 15x200 and 25x500, plus a 1000-slot
 multi-day streaming row — and emits ``BENCH_workload_scale.json``.
 
+The baseline benchmark runs all five baselines (RR, SkyLB, SDIB,
+ReactiveOT, MILP) on a flash_crowd stream at 15x200 and 25x500, once
+batch-native and once through the adapter (Task materialization +
+``schedule()`` + decision-dict conversion each slot), and emits
+``BENCH_baseline_batch.json``.
+
     PYTHONPATH=src python benchmarks/engine_scale.py [--quick]
     PYTHONPATH=src python benchmarks/engine_scale.py --workload-only
+    PYTHONPATH=src python benchmarks/engine_scale.py --baselines-only
 """
 from __future__ import annotations
 
@@ -30,6 +39,8 @@ OUT_PATH = pathlib.Path(__file__).resolve().parent.parent \
     / "BENCH_engine_scale.json"
 WL_OUT_PATH = pathlib.Path(__file__).resolve().parent.parent \
     / "BENCH_workload_scale.json"
+BL_OUT_PATH = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_baseline_batch.json"
 
 CONFIGS = [
     # (regions, servers/region, array slots, reference slots)
@@ -137,6 +148,78 @@ def bench_multiday_stream(n_slots: int = 1000, r: int = 25, *,
             "tasks_per_s": total / max(dt, 1e-9)}
 
 
+BL_CONFIGS = [
+    # (regions, servers/region, slots, utilization)
+    (15, 200, 3, 0.10),
+    (25, 500, 2, 0.05),
+]
+
+
+def bench_baselines() -> None:
+    """All five baselines, batch-native vs the adapter object path, on a
+    flash_crowd stream — emits ``BENCH_baseline_batch.json``."""
+    from repro.api import LegacyOnlyView, LegacySchedulerAdapter
+    from repro.baselines import (MilpScheduler, ReactiveOTScheduler,
+                                 RoundRobinScheduler, SDIBScheduler,
+                                 SkyLBScheduler)
+    from repro.sim import Engine, make_cluster_state
+    from repro.sim.cluster import throughput_per_slot
+    from repro.workload import make_source
+
+    factories = {
+        "RR": lambda r: RoundRobinScheduler(),
+        "SkyLB": lambda r: SkyLBScheduler(),
+        "SDIB": lambda r: SDIBScheduler(),
+        "ReactiveOT": lambda r: ReactiveOTScheduler(r),
+        "MILP": lambda r: MilpScheduler(r),
+    }
+    rows = []
+    for r, spr, slots, util in BL_CONFIGS:
+        st0 = make_cluster_state(r, seed=3,
+                                 servers_per_region=(spr, spr + 1))
+        rate = util * throughput_per_slot(st0) / r
+        src = make_source("flash_crowd", slots, r, seed=2, base_rate=rate)
+        n_tasks = int(src.arrivals_matrix().sum())
+        print(f"[baseline_batch] {r} regions x ~{spr} servers "
+              f"(~{n_tasks // slots} tasks/slot) ...", flush=True)
+        def timed(mk_sched, check_native=False):
+            # warm-up run first (numpy/scipy first-call costs), then the
+            # best of two timed runs — the paths differ by only the
+            # adapter's per-slot conversions, so noise matters
+            best = float("inf")
+            for rep in range(3):
+                eng = Engine(synthetic_topology(r), st0.copy(), src,
+                             mk_sched(), seed=4)
+                if check_native:
+                    assert eng.batch_native
+                t0 = time.time()
+                eng.run()
+                if rep > 0:
+                    best = min(best, (time.time() - t0) / slots)
+            return best
+
+        for name, mk in factories.items():
+            dt_batch = timed(lambda: mk(r), check_native=True)
+            dt_adapter = timed(
+                lambda: LegacySchedulerAdapter(LegacyOnlyView(mk(r))))
+            row = {"baseline": name, "regions": r,
+                   "servers_per_region": spr,
+                   "tasks_per_slot": n_tasks / slots,
+                   "batch_s_per_slot": dt_batch,
+                   "adapter_s_per_slot": dt_adapter,
+                   "speedup": dt_adapter / dt_batch}
+            print(f"  {name:10s} batch {dt_batch * 1e3:8.1f} ms/slot"
+                  f"  adapter {dt_adapter * 1e3:8.1f} ms/slot"
+                  f"  -> {row['speedup']:.2f}x", flush=True)
+            rows.append(row)
+    out = {"benchmark": "baseline_batch",
+           "workload": "flash_crowd scenario (StreamingWorkload)",
+           "paths": "native schedule_batch vs LegacySchedulerAdapter",
+           "rows": rows}
+    BL_OUT_PATH.write_text(json.dumps(out, indent=1))
+    print(f"wrote {BL_OUT_PATH}")
+
+
 def run_workload_bench() -> None:
     rows = []
     for r, spr, s_leg, s_str in WL_CONFIGS:
@@ -169,7 +252,13 @@ def main() -> None:
                     help="skip the reference run on the largest config")
     ap.add_argument("--workload-only", action="store_true",
                     help="only run the workload-generation benchmark")
+    ap.add_argument("--baselines-only", action="store_true",
+                    help="only run the baseline batch-vs-adapter benchmark")
     args = ap.parse_args()
+
+    if args.baselines_only:
+        bench_baselines()
+        return
 
     if not args.workload_only:
         rows = []
@@ -192,6 +281,8 @@ def main() -> None:
         print(f"wrote {OUT_PATH}")
 
     run_workload_bench()
+    if not args.workload_only:
+        bench_baselines()
 
 
 if __name__ == "__main__":

@@ -1,23 +1,34 @@
-"""Scenario sweep: TORTA vs Round-Robin across three demand regimes.
+"""Scenario sweep: TORTA vs all five baselines across three demand regimes.
 
-Runs the batch-native TORTA scheduler and the RR baseline on the same
+Runs every scheduler through the unified batch-native contract on the same
 streaming scenario sources (diurnal, flash_crowd, regional_outage) and
 prints a comparison table — the quickest way to see how temporal-aware
-allocation behaves outside the single sine wave the paper plots.
+allocation behaves outside the single sine wave the paper plots.  No
+legacy ``Task`` objects appear anywhere in the slot cycle: each engine run
+asserts ``batch_native``.
 
     PYTHONPATH=src python examples/scenarios.py [--slots 96]
 """
 import argparse
 
-import numpy as np
-
-from repro.baselines import RoundRobinScheduler
+from repro.baselines import (MilpScheduler, ReactiveOTScheduler,
+                             RoundRobinScheduler, SDIBScheduler,
+                             SkyLBScheduler)
 from repro.core.torta import TortaScheduler
 from repro.sim import Engine, make_cluster_state, make_topology
 from repro.sim.cluster import throughput_per_slot
 from repro.workload import make_source
 
 SCENARIOS = ("diurnal", "flash_crowd", "regional_outage")
+
+
+def make_schedulers(r):
+    return [("TORTA", TortaScheduler(r, seed=0)),
+            ("RR", RoundRobinScheduler()),
+            ("SkyLB", SkyLBScheduler()),
+            ("SDIB", SDIBScheduler()),
+            ("ReactiveOT", ReactiveOTScheduler(r)),
+            ("MILP", MilpScheduler(r))]
 
 
 def main():
@@ -33,24 +44,23 @@ def main():
     rows = []
     for scen in SCENARIOS:
         src = make_source(scen, args.slots, r, seed=2, base_rate=rate)
-        for name, sched in [("TORTA", TortaScheduler(r, seed=0)),
-                            ("RR", RoundRobinScheduler())]:
+        for name, sched in make_schedulers(r):
             eng = Engine(topo, state.copy(), src, sched, seed=4)
+            assert eng.batch_native, f"{name} fell off the batch path"
             s = eng.run().summary()
-            mode = "batch" if eng.batch_mode else "task"
-            rows.append([scen, name, mode,
+            rows.append([scen, name,
                          f"{s['mean_response_s']:.2f}",
                          f"{s['p95_response_s']:.2f}",
                          f"{s['completion_rate']:.3f}",
                          f"{s['load_balance']:.3f}",
                          f"{s['power_cost_total']:.2f}",
                          f"{s['model_switches']}"])
-            print(f"[{scen}] {name:6s} ({mode}) "
+            print(f"[{scen}] {name:10s} (batch) "
                   f"resp={s['mean_response_s']:7.2f}s "
                   f"cr={s['completion_rate']:.3f} "
                   f"power=${s['power_cost_total']:.2f}", flush=True)
 
-    headers = ["scenario", "scheduler", "mode", "resp_s", "p95_s",
+    headers = ["scenario", "scheduler", "resp_s", "p95_s",
                "completion", "LB", "power_$", "switches"]
     widths = [max(len(h), max(len(row[i]) for row in rows))
               for i, h in enumerate(headers)]

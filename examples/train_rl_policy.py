@@ -74,6 +74,8 @@ def main():
         ("TORTA(OT-smoothed)", TortaScheduler(r, seed=0, predictor=pred)),
     ]:
         eng = Engine(topo, state.copy(), eval_wl, sched, seed=4)
+        # unified batch path: no Task objects anywhere in the slot cycle
+        assert eng.batch_native
         s = eng.run().summary()
         print(f"[eval] {name:20s} resp={s['mean_response_s']:.2f}s "
               f"LB={s['load_balance']:.3f} power=${s['power_cost_total']:.2f} "

@@ -1,0 +1,32 @@
+"""Unified batch-native scheduler API.
+
+One canonical scheduling contract for every scheduler — TORTA, all five
+baselines, and anything future:
+
+* :class:`Scheduler` — the protocol every scheduler targets: ``name``,
+  ``reset()``, ``schedule_batch(obs, batch) -> BatchDecision``.
+* :class:`BatchDecision` — the array-shaped decision over one slot's
+  ``TaskBatch`` (parallel ``region``/``server`` rows, -1 = buffer) with
+  shape/range validation and an array-form ``activation`` channel.
+* :class:`LegacySchedulerAdapter` — wraps any remaining ``schedule(obs,
+  tasks) -> SlotDecision`` scheduler (including ``sim/reference.py``'s
+  frozen oracle via ``obs_mode="cluster"``) into the batch contract.
+* :class:`SlotDecision` + :func:`schedule_via_batch` — the deprecated
+  object-path shims: legacy ``schedule()`` methods survive as one-line
+  delegations through the batch path.
+
+The engine (``sim/engine.py``) accepts only this contract; it auto-wraps
+legacy schedulers through :func:`ensure_batch_scheduler` and raises a
+clear error naming the adapter when a scheduler implements neither shape.
+"""
+from repro.api.contract import (BatchDecision, Scheduler, SlotDecision,
+                                batch_to_slot_decision, schedule_via_batch,
+                                slot_to_batch_decision)
+from repro.api.adapter import (LegacyOnlyView, LegacySchedulerAdapter,
+                               ensure_batch_scheduler)
+
+__all__ = [
+    "BatchDecision", "Scheduler", "SlotDecision",
+    "batch_to_slot_decision", "slot_to_batch_decision", "schedule_via_batch",
+    "LegacyOnlyView", "LegacySchedulerAdapter", "ensure_batch_scheduler",
+]

@@ -6,16 +6,28 @@ Objective : response-time proxy + power cost (the paper's simplified Fig-5
             server capacity 3-20 tasks, <=80% region concentration).
 Solved with scipy's HiGHS MILP — used in the solve-time benchmark that
 motivates the two-layer decomposition, and as an optional (tiny-instance)
-scheduler oracle in tests."""
+scheduler oracle in tests.
+
+:class:`MilpScheduler` is the engine-facing baseline on the unified batch
+contract: because the per-task binary form explodes past ~1e3 tasks
+(exactly the Fig-5 point), it solves the GROUP-level integer
+transportation relaxation each slot — integer flows of (origin, kind)
+task groups to regions under capacity and the <=80% concentration bound —
+then places each region's share on least-loaded eligible servers with a
+vectorized greedy."""
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, List
 
 import numpy as np
 from scipy.optimize import LinearConstraint, milp
 from scipy.sparse import lil_matrix
+
+from repro.api import BatchDecision, SlotDecision, schedule_via_batch
+from repro.sim.state import ACTIVE
+from repro.workload.batch import group_rows
 
 
 @dataclasses.dataclass
@@ -90,3 +102,122 @@ def solve(instance: MilpInstance, *, time_limit: float = 300.0
             "solve_time_s": dt,
             "objective": float(res.fun) if res.fun is not None else None,
             "assignment": assignment}
+
+
+# ---------------------------------------------------------------------------
+# engine-facing scheduler (unified batch contract)
+# ---------------------------------------------------------------------------
+
+
+class MilpScheduler:
+    """Per-slot MILP baseline over (origin, kind) task groups x regions."""
+
+    def __init__(self, n_regions: int, *, time_limit: float = 2.0,
+                 region_cap_frac: float = 0.8):
+        self.n_regions = n_regions
+        self.time_limit = time_limit
+        self.region_cap_frac = region_cap_frac
+        self.name = "MILP"
+
+    def reset(self) -> None:
+        pass
+
+    def _solve_counts(self, sizes: np.ndarray, cost: np.ndarray,
+                      cap: np.ndarray) -> np.ndarray:
+        """(G, R) integer flows: min-cost group->region counts under
+        region capacity and the <=80% concentration bound; proportional
+        fallback when the solver fails or the instance is infeasible."""
+        g_n, r = cost.shape
+        total = float(sizes.sum())
+        nv = g_n * r
+        a = lil_matrix((g_n + 2 * r, nv))
+        lb = np.zeros(g_n + 2 * r)
+        ub = np.zeros_like(lb)
+        for gi in range(g_n):                    # each group fully routed
+            a[gi, gi * r:(gi + 1) * r] = 1.0
+            lb[gi] = ub[gi] = sizes[gi]
+        for j in range(r):                       # region capacity
+            a[g_n + j, j::r] = 1.0
+            ub[g_n + j] = cap[j]
+        for j in range(r):                       # concentration <= 80%
+            a[g_n + r + j, j::r] = 1.0
+            ub[g_n + r + j] = max(self.region_cap_frac * total, 1.0)
+        res = milp(c=cost.reshape(-1),
+                   constraints=LinearConstraint(a.tocsr(), lb, ub),
+                   integrality=np.ones(nv), bounds=(0, total),
+                   options={"time_limit": self.time_limit})
+        if res.x is not None and res.success:
+            return np.rint(res.x.reshape(g_n, r)).astype(np.int64)
+        # fallback: proportional-to-capacity split (largest remainders)
+        share = cap / max(cap.sum(), 1e-9)
+        counts = np.floor(sizes[:, None] * share[None, :]).astype(np.int64)
+        for gi in range(g_n):
+            rest = int(sizes[gi]) - int(counts[gi].sum())
+            if rest > 0:
+                frac = sizes[gi] * share - counts[gi]
+                counts[gi, np.argsort(-frac)[:rest]] += 1
+        return counts
+
+    def schedule_batch(self, obs, batch) -> BatchDecision:
+        st = obs.state
+        n = len(batch)
+        r = self.n_regions
+        out_region = np.full(n, -1, np.int32)
+        out_server = np.full(n, -1, np.int32)
+        if n == 0:
+            return BatchDecision(region=out_region, server=out_server)
+
+        keys = batch.origin.astype(np.int64) * 8 + batch.kind_id
+        uniq, inverse = np.unique(keys, return_inverse=True)
+        g_n = uniq.size
+        sizes = np.bincount(inverse, minlength=g_n).astype(np.float64)
+        mean_work = np.bincount(inverse, weights=batch.work_s,
+                                minlength=g_n) / sizes
+        g_origin = (uniq // 8).astype(np.int64)
+
+        # region facts: mean active speed, free capacity, price, latency
+        act = st.state == ACTIVE
+        speed = np.maximum(st.tflops / 112.0, 0.1)
+        reg_speed = np.ones(r)
+        for j in range(r):
+            sl = st.region_slice(j)
+            m = act[sl]
+            if m.any():
+                reg_speed[j] = float(np.mean(speed[sl][m]))
+        free = np.maximum(obs.capacities - obs.queue_tasks, 0.0)
+        # keep the instance feasible: scale capacities to cover demand
+        cap = np.maximum(free, 1e-3)
+        cap = np.ceil(cap * max(1.0, 1.1 * n / cap.sum()))
+        cost = (mean_work[:, None] / reg_speed[None, :]
+                + obs.latency[g_origin] / 1000.0
+                + obs.power_prices[None, :] * 2.0)
+        counts = self._solve_counts(sizes, cost, cap)
+
+        # place each region's share on least-loaded eligible servers
+        proj = np.zeros(st.n_servers)
+        for gi, _key, rows in group_rows(keys):
+            k = 0
+            for j in np.argsort(cost[gi], kind="stable"):
+                c_j = int(counts[gi, j])
+                if c_j <= 0:
+                    continue
+                sel = rows[k:k + c_j]
+                k += c_j
+                sl = st.region_slice(j)
+                ok = act[sl]
+                for i in sel:
+                    elig = ok & (st.mem_gb[sl] >= batch.mem_gb[i])
+                    if not elig.any():
+                        continue               # buffer this task
+                    load = np.where(elig, st.queue_s[sl] + proj[sl],
+                                    np.inf)
+                    best = int(np.argmin(load))
+                    proj[sl.start + best] += \
+                        batch.work_s[i] / speed[sl.start + best]
+                    out_region[i] = j
+                    out_server[i] = best
+        return BatchDecision(region=out_region, server=out_server)
+
+    def schedule(self, obs, tasks: List) -> SlotDecision:
+        """Deprecated: object-path shim over the batch contract."""
+        return schedule_via_batch(self, obs, tasks)

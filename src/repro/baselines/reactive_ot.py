@@ -2,18 +2,26 @@
 Thm 1 — per-slot optimal transport on the CURRENT state only (no prediction,
 no temporal smoothing), with the same micro layer as TORTA.  This is the
 method-class whose switching cost converges to K0 (Thm 2); theory.py
-estimates K0 from its trajectories."""
+estimates K0 from its trajectories.
+
+Batch-native: demand is one bincount over the ``TaskBatch``, region
+sampling draws one batched ``rng.choice`` per origin (all tasks of an
+origin share the same OT row), and server matching runs through
+``MicroAllocator.assign_batch`` — no Task objects.  The batched draws
+consume the seeded RNG stream in a different order than the historical
+per-task loop (deterministic per seed, same distribution).  The legacy
+``schedule()`` entry is the deprecated shim through the batch path."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import List
 
 import numpy as np
 
+from repro.api import BatchDecision, SlotDecision, schedule_via_batch
 from repro.core.macro import MacroAllocator
 from repro.core.micro import MicroAllocator
-from repro.sim.engine import SlotDecision, SlotObs
-from repro.workload import Task
+from repro.sim.engine import SlotObs
 
 
 @dataclasses.dataclass
@@ -21,6 +29,7 @@ class ReactiveOTScheduler:
     n_regions: int
     seed: int = 0
     name: str = "ReactiveOT"
+    supports_batch: bool = True
 
     def __post_init__(self):
         self.macro = MacroAllocator(self.n_regions, eta=1.0)  # no smoothing
@@ -31,33 +40,40 @@ class ReactiveOTScheduler:
     def reset(self) -> None:
         self.__post_init__()
 
-    def schedule(self, obs: SlotObs, tasks: List[Task]) -> SlotDecision:
+    def schedule_batch(self, obs: SlotObs, batch) -> BatchDecision:
         r = self.n_regions
-        demand = np.zeros(r)
-        for t in tasks:
-            demand[t.origin] += 1
+        n = len(batch)
+        demand = batch.origin_counts(r).astype(np.float64)
         cap = np.maximum(obs.capacities - obs.queue_tasks,
                          0.05 * np.maximum(obs.capacities, 1e-6))
         # pure per-slot OT: current demand only (memoryless, Definition 1)
         probs = self.macro.ot_plan(np.maximum(demand, 1e-3), cap,
                                   obs.power_prices, obs.latency)
         self.a_hist.append(probs.copy())
-        by_region: Dict[int, List[Task]] = {j: [] for j in range(r)}
-        for task in tasks:
-            p = probs[task.origin] * (obs.capacities > 0)
+        region_of = np.full(n, -1, np.int32)
+        for origin in np.unique(batch.origin):
+            idx = np.flatnonzero(batch.origin == origin)
+            p = probs[int(origin)] * (obs.capacities > 0)
             if p.sum() <= 0:
                 p = np.ones(r)
             p = p / p.sum()
-            by_region[int(self.rng.choice(r, p=p))].append(task)
-        assignments = {}
-        activation = {}
+            region_of[idx] = self.rng.choice(r, size=idx.size, p=p)
+        activation = np.empty(r, np.int64)       # api array form
+        server_of = np.full(n, -1, np.int32)
         inbound = probs.T @ demand
         for j in range(r):
             # reactive activation: current queue only, no forecast
             activation[j] = self.micro.activation_target(obs, j,
                                                          float(inbound[j]))
-            assignments.update(self.micro.assign_region(obs, j, by_region[j]))
-        return SlotDecision(assignments=assignments, activation=activation)
+            idx = np.flatnonzero(region_of == j)
+            if idx.size:
+                server_of[idx] = self.micro.assign_batch(obs, j, batch, idx)
+        return BatchDecision(region=np.where(server_of >= 0, region_of, -1),
+                             server=server_of, activation=activation)
+
+    def schedule(self, obs: SlotObs, tasks: List) -> SlotDecision:
+        """Deprecated: object-path shim over the batch contract."""
+        return schedule_via_batch(self, obs, tasks)
 
     def switching_costs(self) -> np.ndarray:
         """||A_t - A_{t-1}||_F^2 series — feeds theory.estimate_k0."""

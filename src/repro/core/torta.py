@@ -12,9 +12,10 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.api import BatchDecision, SlotDecision
 from repro.core.macro import MacroAllocator
 from repro.core.micro import MicroAllocator
-from repro.sim.engine import BatchDecision, SlotDecision, SlotObs
+from repro.sim.engine import SlotObs
 from repro.sim.workload import Task
 
 
@@ -121,7 +122,7 @@ class TortaScheduler:
             pm = self._row_probs(a, int(origin), mask)
             region_of[idx] = self.rng.choice(r, size=idx.size, p=pm)
 
-        activation: Dict[int, int] = {}
+        activation = np.empty(r, np.int64)       # api array form
         server_of = np.full(n, -1, np.int32)
         pred_inbound = self._pred_inbound(obs, a, demand, predicted)
         for j in range(r):
@@ -134,6 +135,14 @@ class TortaScheduler:
                              server=server_of, activation=activation)
 
     def schedule(self, obs: SlotObs, tasks: List[Task]) -> SlotDecision:
+        """Legacy object path.  Kept as a REAL implementation (not the
+        one-line shim) for two callers only: the ``sticky`` distribution
+        (inherently object-grouped, routed through the engine's adapter)
+        and the frozen per-object oracle (``sim/reference.py``'s
+        ``make_reference_torta``), whose ``RefSlotObs``/object micro
+        allocator cannot consume ``TaskBatch`` arrays.  For
+        ``distribution="sample"`` it is trajectory-identical to
+        ``schedule_batch`` (pinned by the adapter-parity tests)."""
         r = self.n_regions
         origins = np.fromiter((t.origin for t in tasks), np.int64,
                               count=len(tasks))

@@ -1,19 +1,30 @@
 """Slotted discrete-event engine (480 slots x 45 s by default, §VI-A).
 
-Array-native: the fleet lives in a struct-of-arrays ``ClusterState`` and
-every O(servers) step — warming progression, failure masking, queue drain,
-power billing, ``SlotObs`` construction — is a whole-array operation.  Only
-the per-task assignment application remains a loop (task completions are
-sequential by definition: each task's wait depends on the queue its
-predecessors left behind).
+Array-native end to end: the fleet lives in a struct-of-arrays
+``ClusterState``, demand arrives as ``TaskBatch`` arrays, and there is
+exactly ONE scheduling code path — the batch contract of ``repro.api``
+(``schedule_batch(obs, batch) -> BatchDecision``).  Legacy ``schedule()``
+schedulers are wrapped automatically in ``api.LegacySchedulerAdapter``;
+anything implementing neither contract raises at construction.
 
-Demand comes from any source satisfying the ``repro.workload`` contract:
-the legacy object ``Workload`` or a streaming ``StreamingWorkload``
-(scenario library / trace replay).  Arrival ingestion is vectorized per
-slot (one bincount, no per-task loop), and when the scheduler is
-batch-native (``supports_batch`` + ``schedule_batch``, e.g. TORTA's
-sampling distribution) a streaming source drives the engine entirely
-through ``TaskBatch`` arrays — per-task Python objects are never built.
+Every O(servers) step — warming progression, failure masking, queue
+drain, power billing, ``SlotObs`` construction — is a whole-array
+operation, and the per-task *application* of a decision is a grouped
+whole-array apply: servers that receive a single task this slot are
+updated in one vectorized pass (switch cost, MRU model cache, queue
+push, completion metrics), and only same-server conflicts fall back to a
+sequential walk (a task's wait depends on the queue its same-server
+predecessors left behind).  Slots in which a targeted server went
+inactive between decision and apply (activation/failures) replay the
+legacy per-task resolution loop exactly, so fallback interleaving stays
+bit-compatible with the frozen reference.
+
+Buffered (unassigned) rows age out after ``drop_after_slots`` no matter
+WHY they went unassigned — scheduler-buffered and resolve-failed tasks
+alike (the object engine exempted resolve-failed tasks, so a long
+regional outage recirculated them forever without ever counting a
+drop).  Re-buffered rows are kept grouped by origin region, matching the
+reference engine's per-region buffer order.
 
 Response time = queue wait + switch overhead + compute + network (paper's
 T_completion decomposition); power is billed per region at its electricity
@@ -28,15 +39,19 @@ it on a seeded configuration.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Protocol, Tuple, Union
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+from repro.api import (BatchDecision, LegacySchedulerAdapter, Scheduler,
+                       SlotDecision, ensure_batch_scheduler)
 from repro.sim.cluster import (COLD_START_S, SWITCH_POWER_FRAC, Cluster)
 from repro.sim.metrics import MetricsAggregator
-from repro.sim.state import ACTIVE, OFF, WARMING, ClusterState, model_id
+from repro.sim.state import ACTIVE, OFF, WARMING, ClusterState
 from repro.sim.topology import Topology
-from repro.sim.workload import Task, Workload
+
+__all__ = ["Engine", "FailureEvent", "SlotObs", "SlotDecision",
+           "BatchDecision", "Scheduler"]
 
 
 @dataclasses.dataclass
@@ -53,32 +68,6 @@ class SlotObs:
     arrivals_history: np.ndarray     # (t, R) realized arrivals so far
     state: ClusterState              # full server-level visibility (SoA)
     slot_seconds: float
-
-
-@dataclasses.dataclass
-class SlotDecision:
-    # task.id -> (region, server index within region); None = buffer
-    assignments: Dict[int, Optional[Tuple[int, int]]]
-    # optional per-region target active-server counts (micro layer Eq 6)
-    activation: Optional[Dict[int, int]] = None
-
-
-@dataclasses.dataclass
-class BatchDecision:
-    """Array-native decision over one slot's ``TaskBatch``: parallel to
-    the batch rows; ``region[i] == -1`` buffers task ``i``."""
-
-    region: np.ndarray               # (N,) int32 target region, -1 = buffer
-    server: np.ndarray               # (N,) int32 server index within region
-    activation: Optional[Dict[int, int]] = None
-
-
-class Scheduler(Protocol):
-    name: str
-
-    def schedule(self, obs: SlotObs, tasks: List[Task]) -> SlotDecision: ...
-
-    def reset(self) -> None: ...
 
 
 @dataclasses.dataclass
@@ -111,7 +100,14 @@ class Engine:
                       else ClusterState.from_cluster(cluster))
         self.workload = workload
         self.source = as_source(workload)
-        self.scheduler = scheduler
+        # one contract: batch-native schedulers pass through, legacy
+        # schedule()-style ones are wrapped; batch_mode=False forces the
+        # adapter (compat switch for A/B-ing the two call shapes)
+        self.scheduler = ensure_batch_scheduler(
+            scheduler, force_adapter=(batch_mode is False))
+        self.batch_native = not isinstance(self.scheduler,
+                                           LegacySchedulerAdapter)
+        self.batch_mode = self.batch_native      # legacy alias
         self.slot_s = slot_seconds
         self.drop_after = drop_after_slots
         self.failures = failures or []
@@ -120,18 +116,8 @@ class Engine:
         r = self.state.n_regions
         self.prev_alloc = np.full((r, r), 1.0 / r)
         self.arrivals_hist: List[np.ndarray] = []
-        self.buffers: List[List[Task]] = [[] for _ in range(r)]
-        self.pending_batch = TaskBatch.empty()   # batch-mode buffer
+        self.pending_batch = TaskBatch.empty()   # cross-slot buffer
         self._failed: Dict[int, int] = {}   # region -> slots remaining
-        # batch mode is opt-in for legacy object workloads (keeps seeded
-        # golden-parity trajectories byte-stable) and automatic for
-        # streaming sources when the scheduler is batch-native
-        if batch_mode is None:
-            batch_mode = (not isinstance(workload, Workload)
-                          and bool(getattr(scheduler, "supports_batch",
-                                           False))
-                          and hasattr(scheduler, "schedule_batch"))
-        self.batch_mode = bool(batch_mode)
 
     # ------------------------------------------------------------------
 
@@ -139,9 +125,8 @@ class Engine:
         st = self.state
         r = st.n_regions
         q_s = st.queue_by_region()
-        q_n = (np.array([len(self.buffers[i]) for i in range(r)])
-               + self.pending_batch.origin_counts(r)) + \
-            q_s / np.maximum(self.slot_s, 1.0)
+        q_n = self.pending_batch.origin_counts(r).astype(np.float64) \
+            + q_s / np.maximum(self.slot_s, 1.0)
         hist = (np.stack(self.arrivals_hist) if self.arrivals_hist
                 else np.zeros((0, r)))
         return SlotObs(
@@ -231,10 +216,11 @@ class Engine:
         return g
 
     def _apply_one(self, g: int, mid: int, work_s_raw: float, origin: int,
-                   ridx: int, t: int) -> Tuple[float, float, int]:
-        """Place one task on global server ``g``: queue/model updates +
-        completion metric.  Returns (switch energy J, switch seconds,
-        1 if a model switch happened)."""
+                   ridx: int) -> Tuple[float, float, int, float, float,
+                                       float]:
+        """Place one task on global server ``g``: queue/model updates.
+        Returns (switch energy J, switch seconds, 1 if a model switch
+        happened, wait s, work s, net s)."""
         st = self.state
         speed = max(float(st.tflops[g]) / 112.0, 0.1)   # V100 ref
         switch_s = st.switch_cost(g, mid)
@@ -249,15 +235,144 @@ class Engine:
         wait_s = float(st.queue_s[g]) + switch_s
         net_s = self.topo.latency[origin, ridx] / 1000.0
         st.queue_s[g] += switch_s + work_s
-        self.metrics.record_completion(
-            None, t, wait_s=wait_s, work_s=work_s, net_s=net_s)
-        return energy_j, switch_s, switched
+        return energy_j, switch_s, switched, wait_s, work_s, net_s
+
+    # ---------------------------------------------------- decision apply
+
+    def _apply_decision(self, t: int, batch, decision: BatchDecision):
+        """Apply one slot's ``BatchDecision``.  Returns (alloc matrix,
+        switch energy J, switch seconds, n model switches, assigned
+        mask)."""
+        st = self.state
+        r = st.n_regions
+        n = len(batch)
+        alloc = np.zeros((r, r))
+        assigned = np.zeros(n, bool)
+        if n == 0:
+            return alloc, 0.0, 0.0, 0, assigned
+        region = decision.region
+        cand = region >= 0
+        if not cand.any():
+            return alloc, 0.0, 0.0, 0, assigned
+
+        # vectorized region-level resolution
+        failed = np.zeros(r, bool)
+        for ridx in self._failed:
+            failed[ridx] = True
+        reg = np.where(cand, region, 0)
+        n_srv = st.region_sizes()[reg]
+        ok_region = cand & ~failed[reg] & (n_srv > 0)
+        # validate() already guaranteed in-range servers for assigned rows
+        g0 = np.where(ok_region,
+                      st.region_ptr[:-1][reg] + decision.server, 0)
+        direct = ok_region & (st.state[g0] == ACTIVE)
+        if np.array_equal(direct, ok_region):
+            # every resolvable target is directly active: grouped apply
+            return self._apply_grouped(t, batch, region, g0, direct,
+                                       alloc, assigned)
+        # some targeted server went inactive (activation/failure between
+        # decision and apply): replay the legacy per-task loop so the
+        # least-backlogged fallback sees queues exactly as they evolve
+        return self._apply_sequential(t, batch, decision, alloc, assigned)
+
+    def _apply_grouped(self, t: int, batch, region: np.ndarray,
+                       g0: np.ndarray, rows_mask: np.ndarray,
+                       alloc: np.ndarray, assigned: np.ndarray):
+        """Grouped whole-array apply: unique-server aggregation of
+        work/switches/energy; sequential only within same-server
+        conflicts."""
+        st = self.state
+        rows = np.flatnonzero(rows_mask)
+        g = g0[rows]
+        _, inverse, counts = np.unique(g, return_inverse=True,
+                                       return_counts=True)
+        multi = (counts > 1)[inverse]
+        pos_single = np.flatnonzero(~multi)
+        pos_multi = np.flatnonzero(multi)
+        wait = np.empty(rows.size)
+        work = np.empty(rows.size)
+        net = np.empty(rows.size)
+        energy_total = 0.0
+        switch_total = 0.0
+        n_switches = 0
+
+        if pos_single.size:
+            # servers receiving exactly one task: one vectorized pass
+            single_rows = rows[pos_single]
+            gs = g[pos_single]
+            mids = batch.model_idx[single_rows].astype(np.int64)
+            speed = np.maximum(st.tflops[gs] / 112.0, 0.1)
+            sw = st.switch_cost_rows(gs, mids)
+            switched = sw > 0
+            energy = np.where(switched,
+                              sw * st.power_w[gs] * SWITCH_POWER_FRAC, 0.0)
+            st.note_model_rows(gs, mids)
+            wk = batch.work_s[single_rows] / speed
+            wait[pos_single] = st.queue_s[gs] + sw
+            work[pos_single] = wk
+            net[pos_single] = self.topo.latency[
+                batch.origin[single_rows], region[single_rows]] / 1000.0
+            st.queue_s[gs] += sw + wk
+            energy_total += float(energy.sum())
+            switch_total += float(sw.sum())
+            n_switches += int(np.count_nonzero(switched))
+
+        for p in pos_multi:
+            i = int(rows[p])
+            e, s_s, sw_flag, wt, wk, nt = self._apply_one(
+                int(g0[i]), int(batch.model_idx[i]),
+                float(batch.work_s[i]), int(batch.origin[i]),
+                int(region[i]))
+            energy_total += e
+            switch_total += s_s
+            n_switches += sw_flag
+            wait[p], work[p], net[p] = wt, wk, nt
+
+        self.metrics.record_completions(t, wait, work, net)
+        np.add.at(alloc, (batch.origin[rows], region[rows]), 1.0)
+        assigned[rows] = True
+        return alloc, energy_total, switch_total, n_switches, assigned
+
+    def _apply_sequential(self, t: int, batch, decision: BatchDecision,
+                          alloc: np.ndarray, assigned: np.ndarray):
+        """Exact legacy interleaving: per-task resolution + application in
+        row order (fallback resolution must see the queues earlier tasks
+        left behind)."""
+        st = self.state
+        energy_total = 0.0
+        switch_total = 0.0
+        n_switches = 0
+        waits: List[float] = []
+        works: List[float] = []
+        nets: List[float] = []
+        for i in range(len(batch)):
+            ridx = int(decision.region[i])
+            if ridx < 0:
+                continue
+            g = self._resolve_server(ridx, int(decision.server[i]))
+            if g < 0:
+                continue
+            e, s_s, sw_flag, wt, wk, nt = self._apply_one(
+                g, int(batch.model_idx[i]), float(batch.work_s[i]),
+                int(batch.origin[i]), ridx)
+            energy_total += e
+            switch_total += s_s
+            n_switches += sw_flag
+            waits.append(wt)
+            works.append(wk)
+            nets.append(nt)
+            alloc[batch.origin[i], ridx] += 1
+            assigned[i] = True
+        self.metrics.record_completions(t, waits, works, nets)
+        return alloc, energy_total, switch_total, n_switches, assigned
+
+    # ------------------------------------------------------------------
 
     def _finish_slot(self, t: int, obs: SlotObs, alloc: np.ndarray,
                      switch_energy_j: float, n_switches: int,
                      overhead_s: float) -> None:
         """Allocation smoothing cost, queue drain, power billing and the
-        per-slot metrics record (whole-array; shared by both run modes)."""
+        per-slot metrics record (whole-array)."""
         st = self.state
         r = st.n_regions
         # allocation matrix + theoretical switching cost
@@ -295,71 +410,10 @@ class Engine:
     # ------------------------------------------------------------------
 
     def run(self, n_slots: Optional[int] = None) -> MetricsAggregator:
+        """The single engine loop: ``TaskBatch`` in, ``BatchDecision``
+        out, grouped whole-array apply — for every scheduler."""
         t_total = n_slots or self.source.n_slots
-        if hasattr(self.scheduler, "reset"):
-            self.scheduler.reset()
-        if self.batch_mode:
-            return self._run_batched(t_total)
-        return self._run_tasks(t_total)
-
-    def _run_tasks(self, t_total: int) -> MetricsAggregator:
-        """Object-path loop: per-task ``SlotDecision`` dicts (legacy
-        schedulers, golden-parity semantics)."""
-        st = self.state
-        r = st.n_regions
-        for t in range(t_total):
-            self._step_failures(t)
-            self._progress_warming()
-
-            arrivals = (self.source.slot_tasks(t)
-                        if t < self.source.n_slots else [])
-            arr_vec = np.bincount(
-                np.fromiter((task.origin for task in arrivals), np.int64,
-                            count=len(arrivals)),
-                minlength=r)[:r].astype(np.float64)
-            self.arrivals_hist.append(arr_vec)
-            # buffered tasks get first chance
-            tasks = [tk for b in self.buffers for tk in b] + arrivals
-            for b in self.buffers:
-                b.clear()
-
-            obs = self._obs(t)
-            decision = self.scheduler.schedule(obs, tasks)
-            overhead_s = 0.0
-            if decision.activation:
-                overhead_s += self._apply_activation(decision.activation)
-
-            alloc = np.zeros((r, r))
-            switch_energy_j = 0.0
-            n_switches = 0
-            for task in tasks:
-                tgt = decision.assignments.get(task.id)
-                if tgt is None:
-                    if t - task.arrival_slot >= self.drop_after:
-                        self.metrics.record_drop(task, t)
-                    else:
-                        self.buffers[task.origin].append(task)
-                    continue
-                ridx, sidx = tgt
-                g = self._resolve_server(ridx, sidx)
-                if g < 0:
-                    self.buffers[task.origin].append(task)
-                    continue
-                energy_j, switch_s, switched = self._apply_one(
-                    g, model_id(task.model), task.work_s, task.origin,
-                    ridx, t)
-                switch_energy_j += energy_j
-                overhead_s += switch_s
-                n_switches += switched
-                alloc[task.origin, ridx] += 1
-
-            self._finish_slot(t, obs, alloc, switch_energy_j, n_switches,
-                              overhead_s)
-        return self.metrics
-
-    def _run_batched(self, t_total: int) -> MetricsAggregator:
-        """Array-path loop: ``TaskBatch`` in, ``BatchDecision`` out — no
-        per-task Python objects anywhere in the slot cycle."""
+        self.scheduler.reset()
         TaskBatch = self._TaskBatch
         st = self.state
         r = st.n_regions
@@ -378,45 +432,30 @@ class Engine:
 
             obs = self._obs(t)
             decision = self.scheduler.schedule_batch(obs, batch)
+            decision.validate(len(batch), st)
             overhead_s = 0.0
-            if decision.activation:
-                overhead_s += self._apply_activation(decision.activation)
+            targets = decision.activation_targets(r)
+            if targets:
+                overhead_s += self._apply_activation(targets)
 
-            alloc = np.zeros((r, r))
-            switch_energy_j = 0.0
-            n_switches = 0
-            n = len(batch)
-            assigned = np.zeros(n, bool)
-            resolve_failed = np.zeros(n, bool)
-            for i in range(n):
-                ridx = int(decision.region[i])
-                if ridx < 0:
-                    continue
-                g = self._resolve_server(ridx, int(decision.server[i]))
-                if g < 0:
-                    resolve_failed[i] = True
-                    continue
-                energy_j, switch_s, switched = self._apply_one(
-                    g, int(batch.model_idx[i]), float(batch.work_s[i]),
-                    int(batch.origin[i]), ridx, t)
-                switch_energy_j += energy_j
-                overhead_s += switch_s
-                n_switches += switched
-                alloc[batch.origin[i], ridx] += 1
-                assigned[i] = True
+            (alloc, switch_energy_j, switch_s, n_switches,
+             assigned) = self._apply_decision(t, batch, decision)
+            overhead_s += switch_s
 
-            # unassigned rows: scheduler-buffered tasks age out exactly
-            # like the object path's per-task check; tasks whose resolved
-            # region couldn't take them (failed/empty) are always
-            # re-buffered, also matching the object path
+            # every unassigned row ages out the same way, whether the
+            # scheduler buffered it or its server failed resolution —
+            # resolve-failed tasks used to be exempt, recirculating
+            # forever (and never counting as drops) through long outages
             left = np.flatnonzero(~assigned)
             if left.size:
-                too_old = ((t - batch.arrival_slot[left])
-                           >= self.drop_after) & ~resolve_failed[left]
+                too_old = (t - batch.arrival_slot[left]) >= self.drop_after
                 n_drop = int(np.count_nonzero(too_old))
                 if n_drop:
                     self.metrics.record_drops(n_drop, t)
-                self.pending_batch = batch.select(left[~too_old])
+                keep = left[~too_old]
+                # reference-faithful buffer order: group rows by origin
+                keep = keep[np.argsort(batch.origin[keep], kind="stable")]
+                self.pending_batch = batch.select(keep)
 
             self._finish_slot(t, obs, alloc, switch_energy_j, n_switches,
                               overhead_s)

@@ -56,6 +56,21 @@ class MetricsAggregator:
         self.net_times.append(net_s)
         self.completion_slots.append(t)
 
+    def record_completions(self, t: int, wait_s, work_s, net_s) -> None:
+        """Bulk completion record for the engine's grouped apply (same
+        per-task values as ``record_completion``, appended in one go)."""
+        wait = np.asarray(wait_s, np.float64)
+        if wait.size == 0:
+            return
+        work = np.asarray(work_s, np.float64)
+        net = np.asarray(net_s, np.float64)
+        self.completed += int(wait.size)
+        self.response_times.extend((wait + work + net).tolist())
+        self.wait_times.extend(wait.tolist())
+        self.work_times.extend(work.tolist())
+        self.net_times.extend(net.tolist())
+        self.completion_slots.extend([t] * int(wait.size))
+
     def record_drop(self, task, t: int) -> None:
         self.dropped += 1
 

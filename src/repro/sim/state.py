@@ -157,6 +157,15 @@ class ClusterState:
         cost = np.where(warm_hit, self.switch_scale * _WARM_HIT_S, cost)
         return np.where(self.current_model == mid, 0.0, cost)
 
+    def switch_cost_rows(self, g: np.ndarray, mids: np.ndarray) -> np.ndarray:
+        """(K,) seconds to switch server ``g[k]`` to model ``mids[k]`` —
+        the per-(server, model) pair form of :meth:`switch_cost`."""
+        scale = self.switch_scale[g]
+        warm_hit = (self.warm_models[g] == mids[:, None]).any(axis=1)
+        cost = np.where(warm_hit, scale * _WARM_HIT_S,
+                        scale * MODEL_SWITCH_S)
+        return np.where(self.current_model[g] == mids, 0.0, cost)
+
     def switch_cost(self, g: int, mid: int) -> float:
         if self.current_model[g] == mid:
             return 0.0
@@ -181,6 +190,23 @@ class ClusterState:
         new = ([mid] + kept)[:WARM_SLOTS]
         new += [NO_MODEL] * (WARM_SLOTS - len(new))
         self.warm_models[g] = new
+
+    def note_model_rows(self, g: np.ndarray, mids: np.ndarray) -> None:
+        """Vectorized :meth:`note_model` over DISTINCT servers ``g`` (the
+        engine's grouped apply guarantees uniqueness; duplicate entries
+        would race on the MRU update)."""
+        self.current_model[g] = mids.astype(self.current_model.dtype)
+        rows = self.warm_models[g]                        # (K, W)
+        keep = (rows != mids[:, None]) & (rows != NO_MODEL)
+        # stable kept-first column permutation preserves MRU order
+        order = np.argsort(~keep, axis=1, kind="stable")
+        kept = np.take_along_axis(rows, order, axis=1)
+        n_keep = keep.sum(axis=1)
+        out = np.full_like(rows, NO_MODEL)
+        out[:, 0] = mids
+        for k in range(WARM_SLOTS - 1):
+            out[:, k + 1] = np.where(n_keep > k, kept[:, k], NO_MODEL)
+        self.warm_models[g] = out
 
     # -------------------------------------------------------- conversions
 

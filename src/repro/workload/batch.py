@@ -30,6 +30,23 @@ MODEL_KIND_ID = np.array([KIND_IDS[task_profile(m)[2]] for m in MODEL_NAMES],
                          np.int8)
 
 
+def group_rows(keys: np.ndarray):
+    """Yield ``(gi, key, rows)`` per distinct key over a per-row key array,
+    in order of each key's FIRST OCCURRENCE; ``rows`` preserves original
+    row order and ``gi`` indexes the sorted-unique key (so callers can
+    address per-group arrays built with ``np.unique``'s inverse).  One
+    argsort total — the shared grouping idiom of the batch-native
+    schedulers (no per-group O(N) scans)."""
+    keys = np.asarray(keys)
+    uniq, first, inverse = np.unique(keys, return_index=True,
+                                     return_inverse=True)
+    starts = np.concatenate(
+        ([0], np.cumsum(np.bincount(inverse, minlength=uniq.size))))
+    grouped = np.argsort(inverse, kind="stable")
+    for gi in np.argsort(first):
+        yield int(gi), uniq[gi], grouped[starts[gi]:starts[gi + 1]]
+
+
 def zipf_model_mix(exponent: float = 1.4) -> np.ndarray:
     """(M,) zipf-ish popularity over the served-model catalogue — the same
     distribution the legacy ``make_workload`` sampler uses."""

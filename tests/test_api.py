@@ -1,0 +1,306 @@
+"""Unified batch-native scheduler API: adapter-vs-native parity for every
+baseline, BatchDecision validation, the engine's protocol check, and
+object-free 25x500 runs for all five baselines."""
+import networkx as nx
+import numpy as np
+import pytest
+
+from repro.api import (BatchDecision, LegacyOnlyView,
+                       LegacySchedulerAdapter, Scheduler,
+                       ensure_batch_scheduler)
+from repro.baselines import (MilpScheduler, ReactiveOTScheduler,
+                             RoundRobinScheduler, SDIBScheduler,
+                             SkyLBScheduler)
+from repro.core.torta import TortaScheduler
+from repro.sim import Engine, make_cluster_state
+from repro.sim.topology import Topology
+from repro.workload import TaskBatch, make_source
+
+BASELINES = {
+    "rr": lambda r: RoundRobinScheduler(),
+    "skylb": lambda r: SkyLBScheduler(),
+    "sdib": lambda r: SDIBScheduler(),
+    "reactive_ot": lambda r: ReactiveOTScheduler(r),
+    "milp": lambda r: MilpScheduler(r),
+    "torta": lambda r: TortaScheduler(r, seed=0),
+}
+
+EXACT_KEYS = ("completed", "dropped", "model_switches")
+FLOAT_KEYS = ("power_cost_total", "switch_cost_total", "mean_response_s",
+              "mean_wait_s", "operational_overhead")
+
+
+def _topology(r: int, seed: int = 0) -> Topology:
+    rng = np.random.default_rng(seed)
+    lat = rng.uniform(10, 80, (r, r))
+    lat = (lat + lat.T) / 2
+    np.fill_diagonal(lat, 0.0)
+    return Topology(name=f"synth{r}", n_regions=r, bandwidth_gbps=10,
+                    latency=lat, graph=nx.cycle_graph(r))
+
+
+@pytest.fixture(scope="module")
+def api_world():
+    r = 4
+    topo = _topology(r)
+    state = make_cluster_state(r, seed=3)
+    src = make_source("diurnal", 16, r, seed=2, base_rate=5.0)
+    return topo, state, src
+
+
+# ---------------------------------------------------------------------------
+# adapter-vs-native parity (satellite: identical completions/drops/
+# switches/power for a seeded run through either call shape)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(BASELINES))
+def test_adapter_vs_native_parity(api_world, name):
+    topo, state, src = api_world
+    r = topo.n_regions
+    factory = BASELINES[name]
+    s_native = Engine(topo, state.copy(), src, factory(r),
+                      seed=4).run().summary()
+    adapter = LegacySchedulerAdapter(LegacyOnlyView(factory(r)))
+    eng = Engine(topo, state.copy(), src, adapter, seed=4)
+    s_adapter = eng.run().summary()
+    for k in EXACT_KEYS:
+        assert s_native[k] == s_adapter[k], (name, k)
+    for k in FLOAT_KEYS:
+        assert s_native[k] == pytest.approx(s_adapter[k], rel=1e-9), (name, k)
+
+
+def test_forced_adapter_mode_matches_native(api_world):
+    """batch_mode=False (compat switch) routes a native scheduler through
+    its legacy schedule() — and must land on the identical trajectory."""
+    topo, state, src = api_world
+    r = topo.n_regions
+    s_native = Engine(topo, state.copy(), src, TortaScheduler(r, seed=0),
+                      seed=4).run().summary()
+    eng = Engine(topo, state.copy(), src, TortaScheduler(r, seed=0),
+                 seed=4, batch_mode=False)
+    assert not eng.batch_native
+    s_adapter = eng.run().summary()
+    for k in EXACT_KEYS:
+        assert s_native[k] == s_adapter[k], k
+
+
+# ---------------------------------------------------------------------------
+# protocol check + adapter plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_engine_rejects_non_scheduler(api_world):
+    topo, state, src = api_world
+
+    class NotAScheduler:
+        pass
+
+    with pytest.raises(TypeError, match="LegacySchedulerAdapter"):
+        Engine(topo, state.copy(), src, NotAScheduler(), seed=4)
+
+
+def test_engine_auto_wraps_legacy_scheduler(api_world):
+    topo, state, src = api_world
+    eng = Engine(topo, state.copy(), src,
+                 LegacyOnlyView(RoundRobinScheduler()), seed=4)
+    assert isinstance(eng.scheduler, LegacySchedulerAdapter)
+    assert not eng.batch_native
+    s = eng.run(4).summary()
+    assert s["completed"] > 0
+
+
+def test_native_scheduler_passes_protocol():
+    for name, factory in BASELINES.items():
+        sched = factory(3)
+        assert isinstance(sched, Scheduler), name
+        assert ensure_batch_scheduler(sched) is sched, name
+
+
+def test_force_adapter_on_batch_only_scheduler_is_clear(api_world):
+    """batch_mode=False on a scheduler with no legacy schedule() must say
+    so, not claim the scheduler implements neither contract; an explicit
+    adapter passes through unchanged."""
+    topo, state, src = api_world
+
+    class BatchOnly:
+        name = "batch-only"
+
+        def reset(self):
+            pass
+
+        def schedule_batch(self, obs, batch):
+            n = len(batch)
+            return BatchDecision(region=np.full(n, -1, np.int32),
+                                 server=np.full(n, -1, np.int32))
+
+    with pytest.raises(TypeError, match="batch-native only"):
+        Engine(topo, state.copy(), src, BatchOnly(), seed=4,
+               batch_mode=False)
+    adapter = LegacySchedulerAdapter(LegacyOnlyView(RoundRobinScheduler()))
+    assert ensure_batch_scheduler(adapter, force_adapter=True) is adapter
+
+
+def test_supports_batch_false_routes_through_adapter():
+    sched = TortaScheduler(3, seed=0, distribution="sticky")
+    wrapped = ensure_batch_scheduler(sched)
+    assert isinstance(wrapped, LegacySchedulerAdapter)
+    assert wrapped.wrapped is sched
+
+
+# ---------------------------------------------------------------------------
+# BatchDecision validation
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_state():
+    return make_cluster_state(3, seed=7)
+
+
+def test_batch_decision_dtype_coercion():
+    d = BatchDecision(region=[0, 1, -1], server=np.array([0.0, 2.0, -1.0]))
+    assert d.region.dtype == np.int32 and d.server.dtype == np.int32
+    assert len(d) == 3
+    with pytest.raises(ValueError, match="1-D"):
+        BatchDecision(region=np.zeros((2, 2)), server=np.zeros(4))
+
+
+def test_batch_decision_length_validation(tiny_state):
+    d = BatchDecision(region=np.zeros(3, np.int32),
+                      server=np.zeros(3, np.int32))
+    with pytest.raises(ValueError, match="length"):
+        d.validate(5, tiny_state)
+    bad = BatchDecision(region=np.zeros(3, np.int32),
+                        server=np.zeros(2, np.int32))
+    with pytest.raises(ValueError, match="server"):
+        bad.validate(3, tiny_state)
+
+
+def test_batch_decision_range_validation(tiny_state):
+    r = tiny_state.n_regions
+    with pytest.raises(ValueError, match="region"):
+        BatchDecision(region=[r], server=[0]).validate(1, tiny_state)
+    with pytest.raises(ValueError, match="region"):
+        BatchDecision(region=[-2], server=[0]).validate(1, tiny_state)
+    big = int(tiny_state.region_sizes()[0])
+    with pytest.raises(ValueError, match="server"):
+        BatchDecision(region=[0], server=[big]).validate(1, tiny_state)
+    with pytest.raises(ValueError, match="server"):
+        BatchDecision(region=[0], server=[-1]).validate(1, tiny_state)
+    # buffered rows need no server; in-range decisions pass
+    ok = BatchDecision(region=[-1, 0], server=[-1, big - 1])
+    assert ok.validate(2, tiny_state) is ok
+
+
+def test_batch_decision_activation_forms(tiny_state):
+    r = tiny_state.n_regions
+    d = BatchDecision(region=np.zeros(0, np.int32),
+                      server=np.zeros(0, np.int32),
+                      activation=np.array([3, -1, 5]))
+    assert d.activation_targets(r) == {0: 3, 2: 5}
+    d2 = BatchDecision(region=np.zeros(0, np.int32),
+                       server=np.zeros(0, np.int32),
+                       activation={1: 4})
+    assert d2.activation_targets(r) == {1: 4}
+    with pytest.raises(ValueError, match="activation"):
+        BatchDecision(region=np.zeros(0, np.int32),
+                      server=np.zeros(0, np.int32),
+                      activation=np.array([1, 2])).validate(0, tiny_state)
+    with pytest.raises(ValueError, match="activation"):
+        BatchDecision(region=np.zeros(0, np.int32),
+                      server=np.zeros(0, np.int32),
+                      activation={r: 2}).validate(0, tiny_state)
+
+
+def test_engine_validates_decisions(api_world):
+    """A scheduler emitting out-of-range servers fails fast in the loop."""
+    topo, state, src = api_world
+
+    class Broken:
+        name = "broken"
+
+        def reset(self):
+            pass
+
+        def schedule_batch(self, obs, batch):
+            n = len(batch)
+            return BatchDecision(region=np.zeros(n, np.int32),
+                                 server=np.full(n, 10 ** 6, np.int32))
+
+    eng = Engine(topo, state.copy(), src, Broken(), seed=4)
+    with pytest.raises(ValueError, match="server"):
+        eng.run(1)
+
+
+# ---------------------------------------------------------------------------
+# drop-aging bugfix: resolve-failed tasks age out during long outages
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_failed_tasks_age_out():
+    """Tasks whose target region is down for longer than drop_after must
+    be dropped, not recirculated forever (they used to be exempt)."""
+    from repro.sim.engine import FailureEvent
+
+    r = 2
+    topo = _topology(r)
+    state = make_cluster_state(r, seed=3)
+
+    class PinToRegion0:
+        name = "pin0"
+
+        def reset(self):
+            pass
+
+        def schedule_batch(self, obs, batch):
+            n = len(batch)
+            return BatchDecision(region=np.zeros(n, np.int32),
+                                 server=np.zeros(n, np.int32))
+
+    src = make_source("diurnal", 30, r, seed=2, base_rate=3.0)
+    eng = Engine(topo, state.copy(), src, PinToRegion0(), seed=4,
+                 drop_after_slots=6,
+                 failures=[FailureEvent(region=0, start_slot=2,
+                                        duration=25)])
+    m = eng.run()
+    # everything pinned to the dead region past slot 2+6 must age out
+    assert m.dropped > 0
+    assert len(eng.pending_batch) <= 7 * 3 * r * 4   # bounded, not growing
+
+
+# ---------------------------------------------------------------------------
+# acceptance: object-free 25x500 flash_crowd run for every baseline
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def big_world():
+    r = 25
+    topo = _topology(r, seed=1)
+    state = make_cluster_state(r, seed=3, servers_per_region=(500, 501))
+    src = make_source("flash_crowd", 3, r, seed=5, base_rate=4.0)
+    return topo, state, src
+
+
+@pytest.mark.parametrize("name", ["rr", "skylb", "sdib", "reactive_ot",
+                                  "milp"])
+def test_baseline_objectfree_25x500_flash_crowd(big_world, monkeypatch,
+                                                name):
+    """Every baseline completes a seeded 25x500 flash_crowd run with zero
+    legacy Task objects constructed anywhere in the slot cycle."""
+    topo, state, src = big_world
+    import repro.workload.legacy as legacy
+
+    def _boom(self, *a, **kw):
+        raise AssertionError("Task objects materialized in batch mode")
+
+    monkeypatch.setattr(TaskBatch, "to_tasks", _boom)
+    monkeypatch.setattr(legacy.Task, "__init__", _boom)
+    eng = Engine(topo, state.copy(), src, BASELINES[name](topo.n_regions),
+                 seed=4)
+    assert eng.batch_native
+    s = eng.run().summary()
+    arrived = int(src.arrivals_matrix().sum())
+    assert s["completed"] + s["dropped"] + len(eng.pending_batch) == arrived
+    assert s["completed"] > 0

@@ -5,7 +5,7 @@ import copy
 import numpy as np
 import pytest
 
-from repro.baselines import RoundRobinScheduler
+from repro.api import LegacySchedulerAdapter
 from repro.core.micro import (LocalityTracker, batched_score_matrix, score,
                               server_feature_matrix, task_feature_matrix)
 from repro.core.torta import TortaScheduler
@@ -34,11 +34,18 @@ def parity_world():
 @pytest.mark.parametrize("which", ["rr", "torta"])
 def test_golden_parity(parity_world, which):
     """Same seeds -> same completions, drops, power cost, switch counts
-    (fp tolerance) between the old-shape semantics and the array engine."""
+    (fp tolerance) between the old-shape semantics and the array engine.
+
+    The "rr" case drives the FROZEN reference RR through the unified
+    engine via ``LegacySchedulerAdapter(obs_mode="cluster")``, so both
+    sides run identical scheduler logic and any divergence isolates the
+    engine's grouped whole-array apply.  The "torta" case additionally
+    pins TORTA's native ``schedule_batch`` to the per-object oracle."""
     topo, cluster, wl = parity_world
     if which == "rr":
-        ref_sched, new_sched = (ReferenceRoundRobinScheduler(),
-                                RoundRobinScheduler())
+        ref_sched = ReferenceRoundRobinScheduler()
+        new_sched = LegacySchedulerAdapter(ReferenceRoundRobinScheduler(),
+                                           obs_mode="cluster")
     else:
         ref_sched = make_reference_torta(topo.n_regions, seed=0)
         new_sched = TortaScheduler(topo.n_regions, seed=0)

@@ -56,7 +56,7 @@ def test_engine_task_conservation(small_world, fresh_cluster):
     eng = Engine(topo, fresh_cluster, wl, RoundRobinScheduler(), seed=0)
     m = eng.run()
     arrived = sum(len(ts) for ts in wl.tasks)
-    buffered = sum(len(b) for b in eng.buffers)
+    buffered = len(eng.pending_batch)
     assert m.completed + m.dropped + buffered == arrived
     s = m.summary()
     assert 0 < s["load_balance"] <= 1.0
