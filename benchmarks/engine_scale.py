@@ -21,9 +21,15 @@ batch-native and once through the adapter (Task materialization +
 ``schedule()`` + decision-dict conversion each slot), and emits
 ``BENCH_baseline_batch.json``.
 
+The micro benchmark A/Bs the phase-2 allocator backends — the numpy
+greedy walk against the jit-compiled ``lax.scan`` pipeline
+(``TortaScheduler(micro_backend="jax")``) — at 15x200 and 25x500, and
+emits ``BENCH_micro_jit.json``.
+
     PYTHONPATH=src python benchmarks/engine_scale.py [--quick]
     PYTHONPATH=src python benchmarks/engine_scale.py --workload-only
     PYTHONPATH=src python benchmarks/engine_scale.py --baselines-only
+    PYTHONPATH=src python benchmarks/engine_scale.py --micro-only
 """
 from __future__ import annotations
 
@@ -41,6 +47,8 @@ WL_OUT_PATH = pathlib.Path(__file__).resolve().parent.parent \
     / "BENCH_workload_scale.json"
 BL_OUT_PATH = pathlib.Path(__file__).resolve().parent.parent \
     / "BENCH_baseline_batch.json"
+MJ_OUT_PATH = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_micro_jit.json"
 
 CONFIGS = [
     # (regions, servers/region, array slots, reference slots)
@@ -98,6 +106,13 @@ def bench_config(r: int, spr: int, slots_new: int, slots_ref: int, *,
         row.update(reference_s_per_slot=dt_ref,
                    reference_slots_per_s=1.0 / dt_ref,
                    speedup=dt_ref / dt_new)
+    else:
+        # explicit nulls + reason, so downstream tooling never key-errors
+        # on the rows where the per-object reference was not run
+        row.update(reference_s_per_slot=None, reference_slots_per_s=None,
+                   speedup=None,
+                   reference_skipped="per-object reference impractical "
+                                     "at this scale")
     return row
 
 
@@ -220,6 +235,65 @@ def bench_baselines() -> None:
     print(f"wrote {BL_OUT_PATH}")
 
 
+MICRO_CONFIGS = [
+    # (regions, servers/region, numpy slots, jax slots)
+    (15, 200, 4, 6),
+    (25, 500, 2, 3),
+]
+
+
+def bench_micro() -> None:
+    """Phase-2 micro backends head to head: the numpy greedy walk vs the
+    jit-compiled lax.scan pipeline, full-engine s/slot on the same
+    calibrated workload as the engine bench — emits
+    ``BENCH_micro_jit.json``."""
+    from repro.core.torta import TortaScheduler
+    from repro.sim import Engine, make_cluster_state, make_workload
+    from repro.sim.cluster import throughput_per_slot
+
+    rows = []
+    for r, spr, s_np, s_jx in MICRO_CONFIGS:
+        topo = synthetic_topology(r)
+        st = make_cluster_state(r, seed=3,
+                                servers_per_region=(spr, spr + 1))
+        rate = 0.35 * throughput_per_slot(st) / r
+        wl = make_workload(max(s_np, s_jx), r, seed=2, base_rate=rate)
+        n_tasks_slot = len(wl.tasks[0])
+        print(f"[micro_jit] {r} regions x ~{spr} servers "
+              f"(~{n_tasks_slot} tasks/slot) ...", flush=True)
+
+        t0 = time.time()
+        Engine(topo, st.copy(), wl,
+               TortaScheduler(r, seed=0)).run(s_np)
+        dt_np = (time.time() - t0) / s_np
+
+        # first jax run pays the per-shape jit compiles (pad-and-mask
+        # keeps them to a handful); the timed run measures steady state
+        Engine(topo, st.copy(), wl,
+               TortaScheduler(r, seed=0, micro_backend="jax")).run(s_jx)
+        t0 = time.time()
+        Engine(topo, st.copy(), wl,
+               TortaScheduler(r, seed=0, micro_backend="jax")).run(s_jx)
+        dt_jx = (time.time() - t0) / s_jx
+
+        row = {"regions": r, "servers_per_region": spr,
+               "servers": st.n_servers, "tasks_per_slot": n_tasks_slot,
+               "numpy_s_per_slot": dt_np, "jax_s_per_slot": dt_jx,
+               "speedup": dt_np / dt_jx}
+        print(f"  numpy {dt_np:7.2f} s/slot  jax {dt_jx:7.2f} s/slot"
+              f"  -> {row['speedup']:.1f}x", flush=True)
+        rows.append(row)
+
+    out = {"benchmark": "micro_jit",
+           "scheduler": "TORTA, micro_backend numpy vs jax (lax.scan)",
+           "timing": "full engine s/slot; jax timed on a second run "
+                     "(first run pays per-shape jit compiles)",
+           "utilization": 0.35,
+           "rows": rows}
+    MJ_OUT_PATH.write_text(json.dumps(out, indent=1))
+    print(f"wrote {MJ_OUT_PATH}")
+
+
 def run_workload_bench() -> None:
     rows = []
     for r, spr, s_leg, s_str in WL_CONFIGS:
@@ -254,10 +328,15 @@ def main() -> None:
                     help="only run the workload-generation benchmark")
     ap.add_argument("--baselines-only", action="store_true",
                     help="only run the baseline batch-vs-adapter benchmark")
+    ap.add_argument("--micro-only", action="store_true",
+                    help="only run the micro numpy-vs-jax backend benchmark")
     args = ap.parse_args()
 
     if args.baselines_only:
         bench_baselines()
+        return
+    if args.micro_only:
+        bench_micro()
         return
 
     if not args.workload_only:

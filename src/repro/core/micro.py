@@ -6,13 +6,23 @@ matrix in ONE batched call per region-slot, with a pluggable backend:
 
 * ``backend="numpy"`` — float64 oracle, exact op-for-op port of the scalar
   reference functions below (kept for tests and ``sim/reference.py``);
-* ``backend="pallas"`` — the ``kernels/compat_score`` Pallas op computes
-  the static hw+load part on accelerator (enable via
-  ``TortaScheduler(use_compat_kernel=True)``).
+* ``backend="jax"`` — the whole greedy pass is a jit-compiled ``lax.scan``
+  over the pre-sorted task axis (``core/micro_jax.py``), with the
+  locality history carried as fixed-shape ``LocalityState`` arrays and an
+  optional fused Pallas static-score kernel (``fused=True``);
+* ``backend="pallas"`` — numpy greedy walk, but the static hw+load part
+  of the score matrix comes from the ``kernels/compat_score`` Pallas op
+  (enable via ``TortaScheduler(use_compat_kernel=True)``).
 
-The greedy pass then walks tasks urgency-first, applying the dynamic terms
-(projected-wait penalty, warm bonus, execution-time term) as whole-row
-vector updates — no per-task x per-server Python loop remains.
+Locality history lives in ``core/micro_state.py``'s ``LocalityState`` — a
+fixed-shape per-region ring buffer scoring identically to the legacy
+``LocalityTracker`` (which survives below as the per-object reference's
+API, with exact-equivalence adapters between the two).
+
+The numpy greedy pass walks tasks urgency-first, applying the dynamic
+terms (projected-wait penalty, warm bonus, execution-time term) as
+whole-row vector updates; the jax pass expresses the same updates inside
+the scan body, so no per-task Python loop remains at all.
 """
 from __future__ import annotations
 
@@ -22,6 +32,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.micro_state import LocalityState
 from repro.sim.engine import SlotObs
 from repro.sim.state import ACTIVE, MODEL_NAMES, ClusterState, model_id
 from repro.sim.workload import Task
@@ -88,7 +99,7 @@ def load_compatibility(srv, slot_s: float) -> float:
 
 @dataclasses.dataclass
 class RecentTask:
-    model: str
+    model: Optional[str]         # None for history entries with mid < 0
     embed: Optional[np.ndarray]
     slot: int
     # cached derived facts for the vectorized path (identical values to
@@ -243,13 +254,12 @@ def hw_load_matrix(task_feats: np.ndarray, server_feats: np.ndarray, *,
                    interpret: bool = True) -> np.ndarray:
     """(N, S) W_HW*hw + W_LOAD*load via the selected backend.
     ``backend="pallas"`` runs it through the ``compat_score`` kernel
-    (float32)."""
+    (float32, no locality operand — the Eq-10 term is folded in on the
+    host, so no (N, S) zeros matrix is allocated per call)."""
     if backend == "pallas":
         from repro.kernels.compat_score import score_matrix
         return np.asarray(score_matrix(
             task_feats.astype(np.float32), server_feats.astype(np.float32),
-            np.zeros((task_feats.shape[0], server_feats.shape[0]),
-                     np.float32),
             use_pallas=True, interpret=interpret)).astype(np.float64)
     if backend == "numpy":
         return hw_load_matrix_np(task_feats, server_feats)
@@ -268,18 +278,54 @@ def batched_score_matrix(task_feats: np.ndarray, server_feats: np.ndarray,
 
 class MicroAllocator:
     """Greedy matching within a region, urgency-first (Algorithm 1,
-    Phase 2), scored via one batched (N x S) matrix per region-slot."""
+    Phase 2), scored via one batched (N x S) matrix per region-slot.
+
+    Locality history is held per region as fixed-shape ``LocalityState``
+    arrays; ``backend="jax"`` hands state + score matrix to the jitted
+    ``lax.scan`` greedy (``core/micro_jax.py``), while the numpy/pallas
+    backends run the (oracle) Python walk over the same state."""
+
+    KEEP = 4                      # history depth (legacy tracker default)
 
     def __init__(self, sigma: float = 1.0, headroom: float = 2.0, *,
-                 backend: str = "numpy", interpret: bool = True):
+                 backend: str = "numpy", interpret: bool = True,
+                 fused: bool = False):
+        if backend not in ("numpy", "pallas", "jax"):
+            raise ValueError(f"unknown micro backend: {backend!r}")
         self.sigma = sigma
         self.headroom = headroom
         self.backend = backend
         self.interpret = interpret
-        self.loc = LocalityTracker()
+        self.fused = fused
+        self._loc: Dict[int, LocalityState] = {}
+        self._uid = 0
 
     def reset(self) -> None:
-        self.loc = LocalityTracker()
+        self._loc = {}
+        self._uid = 0
+
+    def locality_state(self, ridx: int) -> Optional[LocalityState]:
+        """The region's ring-buffer history (None before first use)."""
+        return self._loc.get(ridx)
+
+    def locality_tracker(self) -> LocalityTracker:
+        """All regions' history exported as one legacy tracker
+        (debug/interop; scores are exactly equivalent)."""
+        tracker = LocalityTracker(keep=self.KEEP)
+        for ridx, lstate in sorted(self._loc.items()):
+            lstate.to_tracker(ridx, tracker)
+        return tracker
+
+    def _state_for(self, ridx: int, n_servers: int,
+                   edim: int) -> LocalityState:
+        lstate = self._loc.get(ridx)
+        if lstate is None or lstate.n_servers != n_servers:
+            lstate = LocalityState.empty(n_servers, self.KEEP,
+                                         max(edim, 1))
+        elif lstate.embed_dim < edim:
+            lstate = lstate.grown(edim)
+        self._loc[ridx] = lstate
+        return lstate
 
     def activation_target(self, obs: SlotObs, ridx: int,
                           predicted: float) -> int:
@@ -360,6 +406,15 @@ class MicroAllocator:
         if n == 0 or not active.any():
             return out
         slot_s = obs.slot_seconds
+        lstate = self._state_for(ridx, sl.stop - sl.start,
+                                 embeds.shape[1])
+
+        if self.backend == "jax":
+            from repro.core.micro_jax import assign_scan
+            return assign_scan(self, obs, ridx, lstate, mem_t=mem_t,
+                               work=work, mids=mids, kind_ids=kind_ids,
+                               embeds=embeds, has_embed=has_embed,
+                               norms=norms)
 
         # per-server arrays (region slice)
         mem_s = st.mem_gb[sl]
@@ -370,9 +425,8 @@ class MicroAllocator:
         tf = task_feature_arrays(kind_ids, mem_t)
         sf = server_feature_matrix(st, sl, slot_s)
         loc_cache: dict = {}
-        loc0 = np.stack([self.loc.locality_column(
-            (ridx, i), mids, embeds, norms, has_embed, obs.t,
-            cache=loc_cache)
+        loc0 = np.stack([lstate.column(
+            i, mids, embeds, norms, has_embed, obs.t, cache=loc_cache)
             for i in range(sl.stop - sl.start)], axis=1)
         hwl = hw_load_matrix(tf, sf, backend=self.backend,
                              interpret=self.interpret)
@@ -401,14 +455,14 @@ class MicroAllocator:
             g = sl.start + best
             proj[best] += work[i] / speed[best] \
                 + st.switch_cost(g, int(mids[i]))
-            self.loc.note_fields((ridx, best), int(mids[i]),
-                                 embeds[i] if has_embed[i] else None,
-                                 obs.t)
+            self._uid += 1
+            lstate.note(best, int(mids[i]),
+                        embeds[i] if has_embed[i] else None,
+                        obs.t, self._uid)
             # within-slot locality update: refresh this server's column so
             # later tasks see the just-placed history (linear term)
-            new_col = self.loc.locality_column(
-                (ridx, best), mids, embeds, norms, has_embed, obs.t,
-                cache=loc_cache)
+            new_col = lstate.column(best, mids, embeds, norms, has_embed,
+                                    obs.t, cache=loc_cache)
             static[:, best] = (hwl[:, best] + W_LOC * new_col) \
                 + W_WARM * warm[:, best]
             out[i] = best

@@ -1,0 +1,243 @@
+"""JIT-native micro greedy matching — ``lax.scan`` over the task axis.
+
+This is the ``backend="jax"`` implementation of
+``MicroAllocator._assign_core``: one jit-compiled pipeline that builds the
+full (N, S) Eq 7-10 score matrix, then scans the pre-sorted task axis with
+the warm bonus, projected-wait penalty, exec-time term and within-slot
+locality column refresh expressed as whole-array updates inside the scan
+body.  The per-task Python loop of the numpy oracle disappears entirely;
+locality history is carried through the scan as the fixed-shape
+``LocalityState`` arrays (``core/micro_state.py``).
+
+Numerics mirror the numpy oracle op for op (float64 math under a local
+``enable_x64`` scope, float32 embedding dots cast to float64, identical
+accumulation order, first-index argmax tie-breaking), so assignments are
+identical to ``backend="numpy"`` up to BLAS-vs-XLA last-ulp dot rounding —
+pinned by the randomized parity sweep in ``tests/test_micro_jit.py``.
+
+Pad-and-mask retrace policy: the task axis is padded to a shape bucket
+(powers of two below 256, multiples of 256 above) and padded rows are
+masked out of eligibility, so each run compiles only a handful of
+distinct ``(N_pad, S)`` scan shapes instead of retracing per slot.  The
+static score base can optionally come from the fused
+``kernels/compat_score`` Pallas kernel (float32; interpreted in CI,
+un-interpreted on real TPUs) via ``fused=True``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from repro.core.micro_state import EMPTY, LocalityState
+
+_F64 = jnp.float64
+
+
+def bucket(n: int) -> int:
+    """Pad size for the task axis: powers of two below 256, multiples of
+    256 above — a handful of distinct compiled shapes per run."""
+    if n <= 16:
+        return 16
+    if n < 256:
+        return 1 << (n - 1).bit_length()
+    return 256 * (-(-n // 256))
+
+
+def _loc_consts():
+    from repro.core.micro import LOC_DECAY, W_EMBED, W_LOC, W_MODEL, W_WARM
+    return W_MODEL, W_EMBED, W_LOC, W_WARM, LOC_DECAY
+
+
+def _entry_contribs(task_mids, task_embeds, task_norms, task_has,
+                    e_mids, e_slots, e_embeds, e_norms, t):
+    """(N, K) per-history-entry Eq-10 contributions of one server's ring
+    vs every task (same ops/dtypes as ``LocalityState.column``)."""
+    w_model, w_embed, _, _, loc_decay = _loc_consts()
+    sim = w_model * (task_mids[:, None] == e_mids[None, :]).astype(_F64)
+    dots = task_embeds @ e_embeds.T                       # (N, K) float32
+    denom = task_norms[:, None] * e_norms[None, :]        # float32
+    ok = task_has[:, None] & (denom > 1e-9)
+    safe = jnp.where(ok, denom.astype(_F64), 1.0)
+    sim = sim + jnp.where(ok, w_embed * dots.astype(_F64) / safe, 0.0)
+    age = jnp.clip(t - e_slots, 0, 40).astype(_F64)       # (K,)
+    contrib = sim / jnp.exp(loc_decay * age)[None, :]
+    return jnp.where((e_mids != EMPTY)[None, :], contrib, 0.0)
+
+
+def _sum_newest_first(contrib):
+    """Sum the keep axis in ring order (matches the numpy accumulation)."""
+    col = contrib[..., 0]
+    for k in range(1, contrib.shape[-1]):
+        col = col + contrib[..., k]
+    return col
+
+
+@jax.jit
+def _scan_assign(base, warmterm, loc_mids, loc_slots, loc_embeds,
+                 loc_norms, proj0, active, mem_ok, exec_pen, add_cost,
+                 task_mids, task_embeds, task_norms, task_has, note_norms,
+                 t, slot_s, n_real):
+    """Jitted greedy walk.  ``base`` is the hw+load static part (N, S);
+    the locality term and warm bonus are layered on inside, and the
+    within-slot locality refresh is a whole-column update per step."""
+    _, _, w_loc, _, _ = _loc_consts()
+    n_pad = base.shape[0]
+
+    # initial locality matrix: the per-server entry contributions vmapped
+    # over the server axis -> (N, S, K), summed in ring order
+    loc0 = _sum_newest_first(jax.vmap(
+        _entry_contribs,
+        in_axes=(None, None, None, None, 0, 0, 0, 0, None),
+        out_axes=1)(task_mids, task_embeds, task_norms, task_has,
+                    loc_mids, loc_slots, loc_embeds, loc_norms, t))
+
+    static0 = (base + w_loc * loc0) + warmterm
+
+    def body(carry, i):
+        proj, static, l_mids, l_slots, l_emb, l_nrm = carry
+        eligible = (active & mem_ok[i] & (proj <= 16.0 * slot_s)
+                    & (i < n_real))
+        any_e = eligible.any()
+        q = proj / slot_s
+        sc = (static[i] - (0.8 * q + 0.4 * q * q)) - exec_pen[i]
+        sc = jnp.where(eligible, sc, -jnp.inf)
+        best = jnp.argmax(sc)
+
+        proj = proj.at[best].add(jnp.where(any_e, add_cost[i, best], 0.0))
+
+        # ring push on the chosen server (newest-first shift)
+        nm = jnp.concatenate([task_mids[i][None], l_mids[best, :-1]])
+        ns = jnp.concatenate([t[None], l_slots[best, :-1]])
+        ne = jnp.concatenate([jnp.where(task_has[i], task_embeds[i],
+                                        0.0)[None], l_emb[best, :-1]])
+        nn = jnp.concatenate([jnp.where(task_has[i], note_norms[i],
+                                        0.0)[None], l_nrm[best, :-1]])
+
+        # within-slot locality refresh of the chosen server's column
+        col = _sum_newest_first(_entry_contribs(
+            task_mids, task_embeds, task_norms, task_has, nm, ns, ne, nn,
+            t))
+        new_col = (base[:, best] + w_loc * col) + warmterm[:, best]
+
+        keep_row = ~any_e
+        l_mids = l_mids.at[best].set(jnp.where(keep_row, l_mids[best], nm))
+        l_slots = l_slots.at[best].set(
+            jnp.where(keep_row, l_slots[best], ns))
+        l_emb = l_emb.at[best].set(jnp.where(keep_row, l_emb[best], ne))
+        l_nrm = l_nrm.at[best].set(jnp.where(keep_row, l_nrm[best], nn))
+        static = static.at[:, best].set(
+            jnp.where(any_e, new_col, static[:, best]))
+
+        out_i = jnp.where(any_e, best.astype(jnp.int32), -1)
+        return (proj, static, l_mids, l_slots, l_emb, l_nrm), out_i
+
+    carry0 = (proj0, static0, loc_mids, loc_slots, loc_embeds, loc_norms)
+    (_, _, l_mids, l_slots, l_emb, l_nrm), out = jax.lax.scan(
+        body, carry0, jnp.arange(n_pad))
+    return out, l_mids, l_slots, l_emb, l_nrm
+
+
+def assign_scan(alloc, obs, ridx: int, lstate: LocalityState, *,
+                mem_t: np.ndarray, work: np.ndarray, mids: np.ndarray,
+                kind_ids: np.ndarray, embeds: np.ndarray,
+                has_embed: np.ndarray, norms: np.ndarray) -> np.ndarray:
+    """Host-side wrapper: builds the padded operand set, runs the jitted
+    scan under a local float64 scope, and writes the scanned locality
+    rings back into ``lstate``.  Returns per-task server index (-1 =
+    buffer), identical to the numpy ``_assign_core``."""
+    from repro.core import micro
+    st = obs.state
+    sl = st.region_slice(ridx)
+    n = len(work)
+    slot_s = obs.slot_seconds
+    active = st.state[sl] == micro.ACTIVE
+
+    # reconcile embed widths: a slot whose tasks carry no/narrower
+    # embeddings still scans against a wider carried ring — zero-pad the
+    # task side (exact: the extra dot terms are 0.0, matching the numpy
+    # path's history slice to the task width)
+    if embeds.shape[1] < lstate.embed_dim:
+        embeds = np.pad(embeds,
+                        ((0, 0), (0, lstate.embed_dim - embeds.shape[1])))
+
+    speed = np.maximum(st.tflops[sl] / 112.0, 0.1)
+    cur = st.current_model[sl]
+    tf = micro.task_feature_arrays(kind_ids, mem_t)
+    sf = micro.server_feature_matrix(st, sl, slot_s)
+    warm_hit = st.warm_hit_matrix(mids, sl)
+    warm = np.where(cur[None, :] == mids[:, None], 1.0,
+                    np.where(warm_hit, 0.4, 0.0))
+
+    if alloc.fused:
+        # fused Pallas kernel computes hw+load+warm in one pass (float32);
+        # the warm term is inside `base`, so warmterm stays zero
+        from repro.kernels.compat_score import fused_score
+        server_models = np.concatenate(
+            [cur[:, None], st.warm_models[sl]], axis=1)
+        base = np.asarray(fused_score(
+            jnp.asarray(tf, jnp.float32), jnp.asarray(sf, jnp.float32),
+            jnp.asarray(mids, jnp.float32),
+            jnp.asarray(server_models, jnp.float32),
+            interpret=alloc.interpret)).astype(np.float64)
+        warmterm = np.zeros_like(base)
+    else:
+        base = micro.hw_load_matrix_np(tf, sf)
+        warmterm = micro.W_WARM * warm
+
+    exec_pen = 0.3 * (work[:, None] / speed[None, :]) / slot_s
+    mem_ok = st.mem_gb[sl][None, :] >= mem_t[:, None]
+    add_cost = (work[:, None] / speed[None, :]
+                + st.switch_cost_matrix(mids, sl))
+    # legacy `note_fields` recomputes each entry's norm from its own row
+    # (BLAS 1-D norm), which can differ in the last ulp from the axis norm
+    note_norms = np.array([np.linalg.norm(embeds[i]) if has_embed[i]
+                           else 0.0 for i in range(n)], np.float32)
+
+    n_pad = bucket(n)
+    pad = n_pad - n
+
+    def padf(a, fill=0.0):
+        width = ((0, pad),) + ((0, 0),) * (a.ndim - 1)
+        return np.pad(a, width, constant_values=fill)
+
+    with enable_x64(True):
+        out, l_mids, l_slots, l_emb, l_nrm = _scan_assign(
+            jnp.asarray(padf(base)), jnp.asarray(padf(warmterm)),
+            jnp.asarray(lstate.mids), jnp.asarray(lstate.slots),
+            jnp.asarray(lstate.embeds), jnp.asarray(lstate.norms),
+            jnp.asarray(st.queue_s[sl].astype(np.float64)),
+            jnp.asarray(active), jnp.asarray(padf(mem_ok, False)),
+            jnp.asarray(padf(exec_pen)), jnp.asarray(padf(add_cost)),
+            jnp.asarray(padf(mids.astype(np.int32))),
+            jnp.asarray(padf(embeds.astype(np.float32))),
+            jnp.asarray(padf(norms.astype(np.float32))),
+            jnp.asarray(padf(has_embed, False)),
+            jnp.asarray(padf(note_norms)),
+            jnp.asarray(np.int32(obs.t)),
+            jnp.asarray(np.float64(slot_s)),
+            jnp.asarray(np.int32(n)))
+        out = np.asarray(out)[:n]
+        new_rings = (np.asarray(l_mids), np.asarray(l_slots),
+                     np.asarray(l_emb), np.asarray(l_nrm))
+    _writeback(alloc, lstate, new_rings)
+    return out.astype(np.int32)
+
+
+def _writeback(alloc, lstate: LocalityState,
+               rings: Tuple[np.ndarray, ...]) -> None:
+    """Copy the scanned rings back into the region's ``LocalityState``,
+    refreshing uids (cache keys must be unique, not stable) and counts."""
+    l_mids, l_slots, l_emb, l_nrm = rings
+    lstate.mids[...] = l_mids
+    lstate.slots[...] = l_slots
+    lstate.embeds[...] = l_emb
+    lstate.norms[...] = l_nrm
+    lstate.count[...] = (l_mids != EMPTY).sum(axis=1).astype(np.int32)
+    n_entries = lstate.uid.size
+    lstate.uid[...] = np.arange(alloc._uid + 1, alloc._uid + 1 + n_entries,
+                                dtype=np.int64).reshape(lstate.uid.shape)
+    alloc._uid += n_entries

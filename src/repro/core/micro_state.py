@@ -1,0 +1,202 @@
+"""Fixed-shape locality state for the micro layer (Eq 10 history).
+
+``LocalityState`` replaces ``LocalityTracker``'s ``Dict[(region, server),
+List[RecentTask]]`` with per-region arrays of static shape, so the Eq-10
+locality term can be computed as whole-array work and carried through a
+``lax.scan`` (``core/micro_jax.py``) without any Python containers:
+
+  mids    (S, keep)     int32   model id per history entry, EMPTY pad
+  slots   (S, keep)     int32   slot the entry was noted at
+  embeds  (S, keep, E)  float32 input embedding (zero row = no embedding)
+  norms   (S, keep)     float32 L2 norm of the embedding (0 = none)
+  uid     (S, keep)     int64   stable per-entry id (contribution cache key)
+
+Rows are stored **newest-first** (index 0 is the most recent entry), the
+same order ``LocalityTracker`` keeps its lists in, so the per-entry
+accumulation order of :meth:`column` is bit-identical to
+``LocalityTracker.locality_column`` and the numpy micro backend keeps its
+exact golden parity vs ``sim/reference.py``.  Ring slots beyond ``count``
+hold ``EMPTY`` / zeros and contribute exact ``+0.0``.
+
+``from_tracker`` / ``to_tracker`` are exact-equivalence adapters to the
+legacy tracker (which survives as the API of the frozen per-object
+reference in ``sim/reference.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+# unused ring slots; distinct from NO_MODEL (-1), which is a legal noted id
+EMPTY = -2
+
+
+def _micro_consts():
+    # late import: micro.py imports this module
+    from repro.core.micro import LOC_DECAY, W_EMBED, W_MODEL
+    return W_MODEL, W_EMBED, LOC_DECAY
+
+
+@dataclasses.dataclass
+class LocalityState:
+    """Per-region recent-task history as fixed-shape arrays."""
+
+    mids: np.ndarray       # (S, keep) int32
+    slots: np.ndarray      # (S, keep) int32
+    embeds: np.ndarray     # (S, keep, E) float32
+    norms: np.ndarray      # (S, keep) float32
+    uid: np.ndarray        # (S, keep) int64
+    count: np.ndarray      # (S,) int32 valid entries per server
+
+    # ------------------------------------------------------------- shape
+
+    @property
+    def n_servers(self) -> int:
+        return self.mids.shape[0]
+
+    @property
+    def keep(self) -> int:
+        return self.mids.shape[1]
+
+    @property
+    def embed_dim(self) -> int:
+        return self.embeds.shape[2]
+
+    @classmethod
+    def empty(cls, n_servers: int, keep: int = 4,
+              embed_dim: int = 8) -> "LocalityState":
+        return cls(
+            mids=np.full((n_servers, keep), EMPTY, np.int32),
+            slots=np.zeros((n_servers, keep), np.int32),
+            embeds=np.zeros((n_servers, keep, embed_dim), np.float32),
+            norms=np.zeros((n_servers, keep), np.float32),
+            uid=np.zeros((n_servers, keep), np.int64),
+            count=np.zeros(n_servers, np.int32),
+        )
+
+    def grown(self, embed_dim: int) -> "LocalityState":
+        """Same history, embedding channel widened to ``embed_dim``
+        (existing entries zero-padded; their dot products are unchanged)."""
+        if embed_dim <= self.embed_dim:
+            return self
+        emb = np.zeros((self.n_servers, self.keep, embed_dim), np.float32)
+        emb[:, :, :self.embed_dim] = self.embeds
+        return dataclasses.replace(self, embeds=emb)
+
+    # ------------------------------------------------------------ updates
+
+    def note(self, s: int, mid: int, embed: Optional[np.ndarray],
+             t: int, uid: int) -> None:
+        """Push one entry at the head of server ``s``'s ring (legacy
+        ``LocalityTracker.note_fields`` semantics: the norm is recomputed
+        from the embedding itself, embeds of ``None`` store a zero row)."""
+        self.mids[s, 1:] = self.mids[s, :-1]
+        self.slots[s, 1:] = self.slots[s, :-1]
+        self.embeds[s, 1:] = self.embeds[s, :-1]
+        self.norms[s, 1:] = self.norms[s, :-1]
+        self.uid[s, 1:] = self.uid[s, :-1]
+        self.mids[s, 0] = mid
+        self.slots[s, 0] = t
+        if embed is not None:
+            self.embeds[s, 0, :len(embed)] = embed
+            self.embeds[s, 0, len(embed):] = 0.0
+            self.norms[s, 0] = np.linalg.norm(embed)
+        else:
+            self.embeds[s, 0] = 0.0
+            self.norms[s, 0] = 0.0
+        self.uid[s, 0] = uid
+        self.count[s] = min(int(self.count[s]) + 1, self.keep)
+
+    # ------------------------------------------------------------ scoring
+
+    def column(self, s: int, mids: np.ndarray, embeds: np.ndarray,
+               norms: np.ndarray, has_embed: np.ndarray, t: int,
+               cache: Optional[dict] = None) -> np.ndarray:
+        """Eq-10 locality of every task vs server ``s``'s history — the
+        array-state port of ``LocalityTracker.locality_column`` (same
+        per-entry op order and dtypes, so results are bit-identical).
+        ``cache`` memoizes per-entry contribution vectors across calls
+        within one slot, keyed by the entry's ``uid``."""
+        w_model, w_embed, loc_decay = _micro_consts()
+        n = len(mids)
+        c = int(self.count[s])
+        if c == 0:
+            return np.zeros(n)
+        col = np.zeros(n)
+        for k in range(c):
+            key = int(self.uid[s, k])
+            contrib = cache.get(key) if cache is not None else None
+            if contrib is None:
+                sim = w_model * (mids == self.mids[s, k]).astype(np.float64)
+                if self.norms[s, k] > 0.0 and has_embed.any():
+                    denom = norms * self.norms[s, k]
+                    ok = has_embed & (denom > 1e-9)
+                    dots = embeds @ self.embeds[s, k, :embeds.shape[1]]
+                    safe = np.where(ok, denom, 1.0)
+                    sim = sim + np.where(
+                        ok, w_embed * dots.astype(np.float64) / safe, 0.0)
+                contrib = sim / math.exp(
+                    loc_decay * min(max(t - int(self.slots[s, k]), 0), 40))
+                if cache is not None:
+                    cache[key] = contrib
+            col += contrib
+        return col
+
+    # ----------------------------------------------------------- adapters
+
+    @classmethod
+    def from_tracker(cls, tracker, ridx: int, n_servers: int,
+                     embed_dim: int = 8) -> "LocalityState":
+        """Exact-equivalence import of one region's history from a legacy
+        ``LocalityTracker`` (list order -> newest-first ring order)."""
+        keep = tracker.keep
+        edim = embed_dim
+        for (r, _s), lst in tracker.recent.items():
+            if r != ridx:
+                continue
+            for rt in lst:
+                if rt.embed is not None:
+                    edim = max(edim, rt.embed.shape[0])
+        st = cls.empty(n_servers, keep, edim)
+        for (r, s), lst in tracker.recent.items():
+            if r != ridx or not lst:
+                continue
+            for k, rt in enumerate(lst[:keep]):
+                st.mids[s, k] = rt.mid
+                st.slots[s, k] = rt.slot
+                if rt.embed is not None:
+                    st.embeds[s, k, :rt.embed.shape[0]] = rt.embed
+                st.norms[s, k] = rt.norm
+                st.uid[s, k] = rt.uid
+            st.count[s] = min(len(lst), keep)
+        return st
+
+    def to_tracker(self, ridx: int, tracker=None):
+        """Export this region's history into a legacy ``LocalityTracker``
+        (score-equivalent: zero-norm entries round-trip as ``embed=None``,
+        which contributes identically)."""
+        from repro.core.micro import LocalityTracker, RecentTask
+        from repro.sim.state import MODEL_NAMES
+        if tracker is None:
+            tracker = LocalityTracker(keep=self.keep)
+        for s in range(self.n_servers):
+            c = int(self.count[s])
+            if c == 0:
+                continue
+            lst = []
+            for k in range(c):
+                mid = int(self.mids[s, k])
+                has = self.norms[s, k] > 0.0
+                lst.append(RecentTask(
+                    model=MODEL_NAMES[mid] if mid >= 0 else None,
+                    embed=self.embeds[s, k].copy() if has else None,
+                    slot=int(self.slots[s, k]), mid=mid,
+                    norm=float(self.norms[s, k]),
+                    uid=int(self.uid[s, k])))
+            tracker.recent[(ridx, s)] = lst
+        if self.uid.size:
+            tracker._uid = max(tracker._uid, int(self.uid.max()))
+        return tracker

@@ -35,6 +35,15 @@ class TortaScheduler:
     # through the compat_score Pallas kernel (mirrors use_sinkhorn_kernel)
     use_compat_kernel: bool = False
     kernel_interpret: bool = True
+    # Phase-2 micro backend: "numpy" (float64 oracle, default), "jax"
+    # (jit-compiled lax.scan greedy over LocalityState ring buffers), or
+    # "pallas" (numpy greedy, Pallas hw+load scores — what
+    # use_compat_kernel=True selects).  None = derive from
+    # use_compat_kernel for backward compatibility.
+    micro_backend: Optional[str] = None
+    # with micro_backend="jax": fused Pallas static-score kernel (float32)
+    # instead of the float64 numpy-oracle-ordered static matrix
+    micro_fused_kernel: bool = False
     # Phase-1 task distribution: "sample" = per-task sampling from
     # A_t[origin,:] (Algorithm 1 line 7, paper-faithful — also the better
     # performer, see EXPERIMENTS.md §Ablations); "sticky" = work-quota
@@ -48,10 +57,12 @@ class TortaScheduler:
                                     policy_params=self.policy_params,
                                     predictor=self.predictor,
                                     use_sinkhorn_kernel=self.use_sinkhorn_kernel)
+        backend = self.micro_backend or (
+            "pallas" if self.use_compat_kernel else "numpy")
         self.micro = MicroAllocator(
-            sigma=self.sigma, headroom=self.headroom,
-            backend="pallas" if self.use_compat_kernel else "numpy",
-            interpret=self.kernel_interpret)
+            sigma=self.sigma, headroom=self.headroom, backend=backend,
+            interpret=self.kernel_interpret,
+            fused=self.micro_fused_kernel)
         self.rng = np.random.default_rng(self.seed)
         self.prediction_log = []
         self._sticky = {}

@@ -1,3 +1,4 @@
+from repro.kernels.compat_score.fused import fused_score
 from repro.kernels.compat_score.kernel import compat_score
 from repro.kernels.compat_score.ops import score_matrix
-from repro.kernels.compat_score.ref import compat_score_ref
+from repro.kernels.compat_score.ref import compat_score_ref, fused_score_ref

@@ -29,11 +29,7 @@ from repro.kernels import compiler_params as _compiler_params
 W_HW, W_LOAD, W_LOC = 0.4, 0.4, 0.2
 
 
-def _kernel(t_ref, s_ref, loc_ref, o_ref):
-    tf = t_ref[...].astype(jnp.float32)            # (bn, 8)
-    sf = s_ref[...].astype(jnp.float32)            # (bs, 8)
-    loc = loc_ref[...].astype(jnp.float32)         # (bn, bs)
-
+def _hw_load_tile(tf, sf):
     demand = tf[:, 0][:, None]
     mem_t = tf[:, 1][:, None]
     kind_t = tf[:, 2:5]                            # (bn, 3)
@@ -50,16 +46,30 @@ def _kernel(t_ref, s_ref, loc_ref, o_ref):
     type_match = 0.5 + 0.5 * match
     hw = c * m * type_match
     load = jnp.exp(-4.0 * (util + queue) / jnp.maximum(cap, 1e-9))
-    o_ref[...] = (W_HW * hw + W_LOAD * load + W_LOC * loc
-                  ).astype(o_ref.dtype)
+    return W_HW * hw + W_LOAD * load
+
+
+def _kernel(t_ref, s_ref, loc_ref, o_ref):
+    tf = t_ref[...].astype(jnp.float32)            # (bn, 8)
+    sf = s_ref[...].astype(jnp.float32)            # (bs, 8)
+    loc = loc_ref[...].astype(jnp.float32)         # (bn, bs)
+    o_ref[...] = (_hw_load_tile(tf, sf) + W_LOC * loc).astype(o_ref.dtype)
+
+
+def _kernel_noloc(t_ref, s_ref, o_ref):
+    tf = t_ref[...].astype(jnp.float32)            # (bn, 8)
+    sf = s_ref[...].astype(jnp.float32)            # (bs, 8)
+    o_ref[...] = _hw_load_tile(tf, sf).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "block_s",
                                              "interpret"))
 def compat_score(task_feats: jax.Array, server_feats: jax.Array,
-                 locality: jax.Array, *, block_n: int = 256,
+                 locality: jax.Array = None, *, block_n: int = 256,
                  block_s: int = 256, interpret: bool = False) -> jax.Array:
-    """(N, 8) x (S, 8) x (N, S) -> (N, S) scores."""
+    """(N, 8) x (S, 8) [x (N, S)] -> (N, S) scores.  ``locality=None``
+    skips the locality operand entirely (no zeros allocation, no third
+    VMEM stream) — the hw+load part alone."""
     n, f = task_feats.shape
     s = server_feats.shape[0]
     assert f == 8 and server_feats.shape[1] == 8
@@ -70,20 +80,29 @@ def compat_score(task_feats: jax.Array, server_feats: jax.Array,
                              constant_values=1.0)
         server_feats = jnp.pad(server_feats, ((0, ns * bs - s), (0, 0)),
                                constant_values=1.0)
-        locality = jnp.pad(locality, ((0, nn * bn - n), (0, ns * bs - s)))
+        if locality is not None:
+            locality = jnp.pad(locality,
+                               ((0, nn * bn - n), (0, ns * bs - s)))
+
+    in_specs = [
+        pl.BlockSpec((bn, 8), lambda i, j: (i, 0)),
+        pl.BlockSpec((bs, 8), lambda i, j: (j, 0)),
+    ]
+    operands = [task_feats, server_feats]
+    kernel = _kernel_noloc
+    if locality is not None:
+        in_specs.append(pl.BlockSpec((bn, bs), lambda i, j: (i, j)))
+        operands.append(locality)
+        kernel = _kernel
 
     out = pl.pallas_call(
-        _kernel,
+        kernel,
         grid=(nn, ns),
-        in_specs=[
-            pl.BlockSpec((bn, 8), lambda i, j: (i, 0)),
-            pl.BlockSpec((bs, 8), lambda i, j: (j, 0)),
-            pl.BlockSpec((bn, bs), lambda i, j: (i, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bn, bs), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((nn * bn, ns * bs), jnp.float32),
         compiler_params=_compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
-    )(task_feats, server_feats, locality)
+    )(*operands)
     return out[:n, :s]

@@ -21,8 +21,11 @@ from repro.kernels.compat_score.kernel import compat_score
 from repro.kernels.compat_score.ref import compat_score_ref
 
 
-def score_matrix(task_feats, server_feats, locality, *, use_pallas=True,
-                 interpret=True) -> jax.Array:
+def score_matrix(task_feats, server_feats, locality=None, *,
+                 use_pallas=True, interpret=True) -> jax.Array:
+    """hw+load(+locality) scores.  ``locality=None`` skips the locality
+    operand (callers that fold Eq-10 in on the host pass nothing instead
+    of allocating an (N, S) zeros matrix per call)."""
     if use_pallas:
         return compat_score(task_feats, server_feats, locality,
                             interpret=interpret)

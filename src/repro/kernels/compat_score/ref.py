@@ -1,5 +1,7 @@
-"""Oracle for the compatibility-score kernel."""
+"""Oracles for the compatibility-score kernels (base and fused)."""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -8,7 +10,7 @@ from repro.kernels.compat_score.kernel import W_HW, W_LOAD, W_LOC
 
 
 def compat_score_ref(task_feats: jax.Array, server_feats: jax.Array,
-                     locality: jax.Array) -> jax.Array:
+                     locality: Optional[jax.Array] = None) -> jax.Array:
     tf = task_feats.astype(jnp.float32)
     sf = server_feats.astype(jnp.float32)
     c = jnp.minimum(1.0, sf[None, :, 0] / jnp.maximum(tf[:, None, 0], 1e-9))
@@ -17,5 +19,21 @@ def compat_score_ref(task_feats: jax.Array, server_feats: jax.Array,
     hw = c * m * (0.5 + 0.5 * match)
     load = jnp.exp(-4.0 * (sf[None, :, 5] + sf[None, :, 6])
                    / jnp.maximum(sf[None, :, 7], 1e-9))
-    return (W_HW * hw + W_LOAD * load
-            + W_LOC * locality.astype(jnp.float32)).astype(jnp.float32)
+    out = W_HW * hw + W_LOAD * load
+    if locality is not None:
+        out = out + W_LOC * locality.astype(jnp.float32)
+    return out.astype(jnp.float32)
+
+
+def fused_score_ref(task_feats: jax.Array, server_feats: jax.Array,
+                    task_mids: jax.Array, server_models: jax.Array,
+                    locality: Optional[jax.Array] = None) -> jax.Array:
+    """jnp oracle of the fused hw+load+warm(+locality) kernel."""
+    from repro.kernels.compat_score.fused import W_WARM
+    base = compat_score_ref(task_feats, server_feats, locality)
+    mid = task_mids.astype(jnp.float32)[:, None]
+    cur = server_models.astype(jnp.float32)[:, 0][None, :]
+    warm_hit = (server_models.astype(jnp.float32)[None, :, 1:]
+                == mid[:, :, None]).any(axis=2)
+    warm = jnp.where(mid == cur, 1.0, jnp.where(warm_hit, 0.4, 0.0))
+    return (base + W_WARM * warm).astype(jnp.float32)

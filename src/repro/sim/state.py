@@ -166,6 +166,19 @@ class ClusterState:
                         scale * MODEL_SWITCH_S)
         return np.where(self.current_model[g] == mids, 0.0, cost)
 
+    def switch_cost_matrix(self, mids: np.ndarray,
+                           sl: Optional[slice] = None) -> np.ndarray:
+        """(N, S) seconds to switch server ``j`` to task ``i``'s model —
+        the all-pairs form of :meth:`switch_cost` (optionally restricted
+        to a region slice), consumed by the scanned micro backend."""
+        scale = (self.switch_scale if sl is None
+                 else self.switch_scale[sl])[None, :]
+        cur = self.current_model if sl is None else self.current_model[sl]
+        warm_hit = self.warm_hit_matrix(mids, sl)
+        cost = np.where(warm_hit, scale * _WARM_HIT_S,
+                        scale * MODEL_SWITCH_S)
+        return np.where(cur[None, :] == mids[:, None], 0.0, cost)
+
     def switch_cost(self, g: int, mid: int) -> float:
         if self.current_model[g] == mid:
             return 0.0
