@@ -26,10 +26,16 @@ greedy walk against the jit-compiled ``lax.scan`` pipeline
 (``TortaScheduler(micro_backend="jax")``) — at 15x200 and 25x500, and
 emits ``BENCH_micro_jit.json``.
 
+The fused benchmark A/Bs the fused device-resident slot step — ONE
+multi-region scan (``micro_backend="fused"``) + the jitted engine step
+(``step_backend="jax"``) — against the numpy and per-region-jax
+generations at 15x200 and 25x500, and emits ``BENCH_fused_step.json``.
+
     PYTHONPATH=src python benchmarks/engine_scale.py [--quick]
     PYTHONPATH=src python benchmarks/engine_scale.py --workload-only
     PYTHONPATH=src python benchmarks/engine_scale.py --baselines-only
     PYTHONPATH=src python benchmarks/engine_scale.py --micro-only
+    PYTHONPATH=src python benchmarks/engine_scale.py --fused-only
 """
 from __future__ import annotations
 
@@ -49,6 +55,8 @@ BL_OUT_PATH = pathlib.Path(__file__).resolve().parent.parent \
     / "BENCH_baseline_batch.json"
 MJ_OUT_PATH = pathlib.Path(__file__).resolve().parent.parent \
     / "BENCH_micro_jit.json"
+FS_OUT_PATH = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_fused_step.json"
 
 CONFIGS = [
     # (regions, servers/region, array slots, reference slots)
@@ -294,6 +302,79 @@ def bench_micro() -> None:
     print(f"wrote {MJ_OUT_PATH}")
 
 
+FUSED_CONFIGS = [
+    # (regions, servers/region, numpy slots, jax slots, fused slots)
+    (15, 200, 4, 6, 8),
+    (25, 500, 2, 3, 4),
+]
+
+
+def bench_fused() -> None:
+    """The fused device-resident slot step head to head with the two
+    prior generations: numpy micro backend, per-region jitted scans
+    (``micro_backend="jax"``), and the fused multi-region scan + jitted
+    engine step (``micro_backend="fused"`` + ``step_backend="jax"``) —
+    emits ``BENCH_fused_step.json``."""
+    from repro.core.torta import TortaScheduler
+    from repro.sim import Engine, make_cluster_state, make_workload
+    from repro.sim.cluster import throughput_per_slot
+
+    rows = []
+    for r, spr, s_np, s_jx, s_fu in FUSED_CONFIGS:
+        topo = synthetic_topology(r)
+        st = make_cluster_state(r, seed=3,
+                                servers_per_region=(spr, spr + 1))
+        rate = 0.35 * throughput_per_slot(st) / r
+        wl = make_workload(max(s_np, s_jx, s_fu), r, seed=2,
+                          base_rate=rate)
+        n_tasks_slot = len(wl.tasks[0])
+        print(f"[fused_step] {r} regions x ~{spr} servers "
+              f"(~{n_tasks_slot} tasks/slot) ...", flush=True)
+
+        def timed(mk_engine, slots, warmup=False):
+            # jitted configs pay per-shape compiles on a first run; the
+            # timed run measures steady state
+            if warmup:
+                mk_engine().run(slots)
+            t0 = time.time()
+            mk_engine().run(slots)
+            return (time.time() - t0) / slots
+
+        dt_np = timed(lambda: Engine(topo, st.copy(), wl,
+                                     TortaScheduler(r, seed=0)), s_np)
+        dt_jx = timed(lambda: Engine(
+            topo, st.copy(), wl,
+            TortaScheduler(r, seed=0, micro_backend="jax")), s_jx,
+            warmup=True)
+        dt_fu = timed(lambda: Engine(
+            topo, st.copy(), wl,
+            TortaScheduler(r, seed=0, micro_backend="fused"),
+            step_backend="jax"), s_fu, warmup=True)
+
+        row = {"regions": r, "servers_per_region": spr,
+               "servers": st.n_servers, "tasks_per_slot": n_tasks_slot,
+               "numpy_s_per_slot": dt_np, "jax_s_per_slot": dt_jx,
+               "fused_s_per_slot": dt_fu,
+               "fused_speedup_vs_jax": dt_jx / dt_fu,
+               "fused_speedup_vs_numpy": dt_np / dt_fu}
+        print(f"  numpy {dt_np:7.2f}  per-region-jax {dt_jx:7.2f}  "
+              f"fused {dt_fu:7.2f} s/slot  "
+              f"-> {row['fused_speedup_vs_jax']:.1f}x vs jax, "
+              f"{row['fused_speedup_vs_numpy']:.1f}x vs numpy", flush=True)
+        rows.append(row)
+
+    out = {"benchmark": "fused_step",
+           "scheduler": "TORTA; numpy vs per-region jax scans vs fused "
+                        "multi-region scan + jitted engine step "
+                        "(step_backend=jax)",
+           "timing": "full engine s/slot; jitted configs timed on a "
+                     "second run (first run pays per-shape compiles)",
+           "utilization": 0.35,
+           "rows": rows}
+    FS_OUT_PATH.write_text(json.dumps(out, indent=1))
+    print(f"wrote {FS_OUT_PATH}")
+
+
 def run_workload_bench() -> None:
     rows = []
     for r, spr, s_leg, s_str in WL_CONFIGS:
@@ -330,6 +411,9 @@ def main() -> None:
                     help="only run the baseline batch-vs-adapter benchmark")
     ap.add_argument("--micro-only", action="store_true",
                     help="only run the micro numpy-vs-jax backend benchmark")
+    ap.add_argument("--fused-only", action="store_true",
+                    help="only run the fused-slot-step benchmark "
+                         "(numpy vs per-region-jax vs fused)")
     args = ap.parse_args()
 
     if args.baselines_only:
@@ -337,6 +421,9 @@ def main() -> None:
         return
     if args.micro_only:
         bench_micro()
+        return
+    if args.fused_only:
+        bench_fused()
         return
 
     if not args.workload_only:

@@ -23,8 +23,25 @@ import numpy as np
 ActivationLike = Union[None, Dict[int, int], np.ndarray]
 
 
-def _as_index_array(value, name: str) -> np.ndarray:
-    """Coerce a decision channel to a 1-D int32 array."""
+def _is_device_array(value) -> bool:
+    """A jax device array (duck-typed so this module stays numpy-only for
+    schedulers that never import jax)."""
+    return callable(getattr(value, "block_until_ready", None))
+
+
+def _as_index_array(value, name: str):
+    """Coerce a decision channel to a 1-D int32 array.  Device (jax)
+    arrays are kept device-side — shape/dtype normalization happens with
+    device ops, so building a ``BatchDecision`` from a fused scheduler
+    never forces a host sync; :meth:`BatchDecision.validate` is the one
+    place the channels materialize."""
+    if _is_device_array(value):
+        if value.ndim != 1:
+            raise ValueError(f"BatchDecision.{name} must be 1-D, "
+                             f"got shape {value.shape}")
+        if value.dtype != np.int32:
+            value = value.astype(np.int32)   # stays on device
+        return value
     arr = np.asarray(value)
     if arr.ndim != 1:
         raise ValueError(f"BatchDecision.{name} must be 1-D, "
@@ -69,11 +86,26 @@ class BatchDecision:
                 f"({n_regions},), got {arr.shape}")
         return {j: int(v) for j, v in enumerate(arr) if v >= 0}
 
+    def to_host(self) -> "BatchDecision":
+        """Materialize device-array channels as host numpy (in place);
+        no-op for numpy-backed decisions.  Returns self for chaining."""
+        if _is_device_array(self.region):
+            self.region = np.asarray(self.region)
+        if _is_device_array(self.server):
+            self.server = np.asarray(self.server)
+        if self.activation is not None \
+                and _is_device_array(self.activation):
+            self.activation = np.asarray(self.activation)
+        return self
+
     def validate(self, n_tasks: int, state) -> "BatchDecision":
         """Shape/range validation against a ``ClusterState``: both channels
         length ``n_tasks``; regions in ``[-1, R)``; for assigned rows the
         server index must exist within the target region.  Returns self so
-        the engine can chain it."""
+        the engine can chain it.  Device-array channels are materialized
+        to host here — the decision's single device->host sync point (the
+        engine consumes host arrays right after)."""
+        self.to_host()
         if self.region.shape[0] != n_tasks:
             raise ValueError(
                 f"BatchDecision.region has length {self.region.shape[0]}, "

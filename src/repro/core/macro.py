@@ -83,6 +83,12 @@ class MacroAllocator:
         # blend realized demand with the forecast (temporal awareness)
         blended = 0.5 * demand + 0.5 * predicted * max(demand.sum(), 1.0)
         probs = self.ot_plan(blended, capacity, power_cost, latency)
+        # track realized supply on EVERY call — leaving prev_nu stale
+        # while a trained policy drives allocation made toggling the
+        # policy off mid-experiment see a bogus "supply shock" snap
+        nu = capacity / max(capacity.sum(), 1e-9)
+        shock = float(np.abs(nu - self.prev_nu).sum()) > 0.25
+        self.prev_nu = nu
         if self.policy_params is not None:
             obs = np.concatenate([
                 utilization,
@@ -99,11 +105,8 @@ class MacroAllocator:
             # except under a supply shock (regional failure / recovery),
             # where smoothing toward a stale plan would keep feeding dead
             # capacity (the paper's smoothness term "allows necessary
-            # adaptations"): detect a large nu shift and snap to P*.
-            nu = capacity / max(capacity.sum(), 1e-9)
-            shock = float(np.abs(nu - self.prev_nu).sum()) > 0.25
+            # adaptations"): a large nu shift snaps to P*.
             eta = 1.0 if shock else self.eta
-            self.prev_nu = nu
             a = (1 - eta) * self.a_prev + eta * probs
         a = a / np.maximum(a.sum(1, keepdims=True), 1e-9)
         self.a_prev = a

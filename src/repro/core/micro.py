@@ -290,7 +290,7 @@ class MicroAllocator:
     def __init__(self, sigma: float = 1.0, headroom: float = 2.0, *,
                  backend: str = "numpy", interpret: bool = True,
                  fused: bool = False):
-        if backend not in ("numpy", "pallas", "jax"):
+        if backend not in ("numpy", "pallas", "jax", "fused"):
             raise ValueError(f"unknown micro backend: {backend!r}")
         self.sigma = sigma
         self.headroom = headroom
@@ -298,20 +298,45 @@ class MicroAllocator:
         self.interpret = interpret
         self.fused = fused
         self._loc: Dict[int, LocalityState] = {}
+        self._dev_rings = None        # backend="fused": device-side rings
         self._uid = 0
 
     def reset(self) -> None:
         self._loc = {}
+        self._dev_rings = None
         self._uid = 0
 
     def locality_state(self, ridx: int) -> Optional[LocalityState]:
-        """The region's ring-buffer history (None before first use)."""
+        """The region's ring-buffer history (None before first use).  For
+        ``backend="fused"`` this is a lazy device->host materialization of
+        the stacked rings (uids are backend-local)."""
+        if self._dev_rings is not None:
+            n_servers = self._dev_region_sizes[ridx]
+            return self._dev_rings.region_state(ridx, n_servers)
         return self._loc.get(ridx)
+
+    def _ensure_dev_rings(self, n_regions: int, s_pad: int, edim: int):
+        """Device-resident stacked rings for the fused backend (grown in
+        the embed channel on demand, reset when the fleet shape moves)."""
+        from repro.core.micro_jax import DeviceRings
+        rings = self._dev_rings
+        if rings is None or rings.mids.shape[0] != n_regions \
+                or rings.mids.shape[1] != s_pad:
+            rings = DeviceRings.empty(n_regions, s_pad, self.KEEP,
+                                      max(edim, 1))
+        elif rings.embed_dim < edim:
+            rings = rings.grown(edim)
+        self._dev_rings = rings
+        return rings
 
     def locality_tracker(self) -> LocalityTracker:
         """All regions' history exported as one legacy tracker
         (debug/interop; scores are exactly equivalent)."""
         tracker = LocalityTracker(keep=self.KEEP)
+        if self._dev_rings is not None:
+            for ridx in range(self._dev_rings.mids.shape[0]):
+                self.locality_state(ridx).to_tracker(ridx, tracker)
+            return tracker
         for ridx, lstate in sorted(self._loc.items()):
             lstate.to_tracker(ridx, tracker)
         return tracker
@@ -336,6 +361,17 @@ class MicroAllocator:
         return target_active_servers(
             float(obs.queue_tasks[ridx]), predicted, avg_cap,
             sl.stop - sl.start, sigma=self.sigma, headroom=self.headroom)
+
+    def activation_targets(self, obs: SlotObs,
+                           pred_inbound: np.ndarray) -> np.ndarray:
+        """All regions' Eq-6 targets as one ``(R,)`` array — the api
+        activation form, consumed whole by the fused slot step (exact
+        per-region parity with :meth:`activation_target`)."""
+        r = obs.state.n_regions
+        out = np.empty(r, np.int64)
+        for j in range(r):
+            out[j] = self.activation_target(obs, j, float(pred_inbound[j]))
+        return out
 
     def assign_region(self, obs: SlotObs, ridx: int, tasks: List[Task]
                       ) -> Dict[int, Optional[Tuple[int, int]]]:
@@ -363,6 +399,38 @@ class MicroAllocator:
             norms=np.linalg.norm(embeds, axis=1))
         return {tk.id: ((ridx, int(s)) if s >= 0 else None)
                 for tk, s in zip(ordered, servers)}
+
+    def assign_batch_all(self, obs: SlotObs, batch,
+                         region_of: np.ndarray) -> np.ndarray:
+        """Fused whole-slot entry (``backend="fused"``): assign EVERY
+        routed row of the slot's ``TaskBatch`` in one multi-region scan
+        dispatch (``core/micro_jax.assign_scan_all``).  ``region_of`` is
+        the phase-1 target region per row (-1 = unrouted); returns the
+        server-in-region per row (-1 = buffer)."""
+        from repro.core.micro_jax import assign_scan_all
+        region_of = np.asarray(region_of)
+        n = len(batch)
+        out = np.full(n, -1, np.int32)
+        rows = np.flatnonzero(region_of >= 0)
+        if rows.size == 0:
+            return out
+        self._dev_region_sizes = obs.state.region_sizes()
+        # one global sort: region-major, then each region's greedy order
+        # (deadline, model name, -work) — stable-chain equal to the
+        # per-region lexsort of assign_batch
+        work = batch.work_s[rows]
+        order = np.lexsort((-work, _MODEL_RANK[batch.model_idx[rows]],
+                            batch.deadline_slot[rows], region_of[rows]))
+        sidx = rows[order]
+        embeds = batch.embeds[sidx]
+        norms = np.linalg.norm(embeds, axis=1)
+        out[sidx] = assign_scan_all(
+            self, obs, region_of[sidx],
+            mem_t=batch.mem_gb[sidx], work=work[order],
+            mids=batch.model_idx[sidx].astype(np.int16),
+            kind_ids=batch.kind_id[sidx], embeds=embeds,
+            has_embed=norms > 0.0, norms=norms)
+        return out
 
     def assign_batch(self, obs: SlotObs, ridx: int, batch,
                      idx: np.ndarray) -> np.ndarray:
@@ -406,6 +474,17 @@ class MicroAllocator:
         if n == 0 or not active.any():
             return out
         slot_s = obs.slot_seconds
+        if self.backend == "fused":
+            # single-region call through the multi-region scan (the
+            # whole-slot path is assign_batch_all; this keeps the
+            # per-region API — tests, legacy/sticky callers — on the
+            # same device-resident rings)
+            from repro.core.micro_jax import assign_scan_all
+            self._dev_region_sizes = st.region_sizes()
+            return assign_scan_all(
+                self, obs, np.full(n, ridx, np.int64), mem_t=mem_t,
+                work=work, mids=mids, kind_ids=kind_ids, embeds=embeds,
+                has_embed=has_embed, norms=norms)
         lstate = self._state_for(ridx, sl.stop - sl.start,
                                  embeds.shape[1])
 

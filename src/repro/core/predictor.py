@@ -102,16 +102,20 @@ def make_dataset(arrivals: np.ndarray, util: np.ndarray, queue: np.ndarray
 
     arrivals/util/queue: (T, R).  hist feature per slot = [U, Q, H] where H
     is the normalized arrival distribution (the paper's 'historical load
-    pattern' channel)."""
+    pattern' channel).  The window extraction is one strided view over the
+    slot axis — no Python loop over T (exact-output parity with the loop
+    form is pinned by ``tests/test_fused_step.py``)."""
     t_total, r = arrivals.shape
     h = arrivals / np.maximum(arrivals.sum(1, keepdims=True), 1e-9)
     feats = np.concatenate([util, queue / np.maximum(queue.max(), 1.0), h],
                            axis=1)                       # (T, 3R)
-    xs, ys = [], []
-    for t in range(K_HIST, t_total - 1):
-        xs.append(feats[t - K_HIST:t])
-        ys.append(h[t + 1])
-    return np.asarray(xs, np.float32), np.asarray(ys, np.float32)
+    n = t_total - 1 - K_HIST                 # windows feats[t-K:t]
+    if n <= 0:
+        return np.asarray([], np.float32), np.asarray([], np.float32)
+    xs = np.lib.stride_tricks.sliding_window_view(
+        feats, K_HIST, axis=0)[:n]           # (n, 3R, K) strided view
+    return (np.ascontiguousarray(xs.transpose(0, 2, 1)).astype(np.float32),
+            h[K_HIST + 1:t_total].astype(np.float32))
 
 
 class EmaPredictor:

@@ -36,7 +36,10 @@ class TortaScheduler:
     use_compat_kernel: bool = False
     kernel_interpret: bool = True
     # Phase-2 micro backend: "numpy" (float64 oracle, default), "jax"
-    # (jit-compiled lax.scan greedy over LocalityState ring buffers), or
+    # (jit-compiled per-region lax.scan greedy over LocalityState ring
+    # buffers), "fused" (ONE padded multi-region scan per slot with
+    # device-resident rings and the operand build inside the jit —
+    # pair with Engine(step_backend="jax") for the fused slot step), or
     # "pallas" (numpy greedy, Pallas hw+load scores — what
     # use_compat_kernel=True selects).  None = derive from
     # use_compat_kernel for backward compatibility.
@@ -133,15 +136,23 @@ class TortaScheduler:
             pm = self._row_probs(a, int(origin), mask)
             region_of[idx] = self.rng.choice(r, size=idx.size, p=pm)
 
-        activation = np.empty(r, np.int64)       # api array form
-        server_of = np.full(n, -1, np.int32)
         pred_inbound = self._pred_inbound(obs, a, demand, predicted)
-        for j in range(r):
-            activation[j] = self.micro.activation_target(
-                obs, j, float(pred_inbound[j]))
-            idx = np.flatnonzero(region_of == j)
-            if idx.size:
-                server_of[idx] = self.micro.assign_batch(obs, j, batch, idx)
+        if self.micro.backend == "fused":
+            # fused slot path: phase-1 outputs (sampled regions + Eq-6
+            # targets from pred_inbound) feed ONE multi-region scan
+            # dispatch instead of R per-region assign calls
+            activation = self.micro.activation_targets(obs, pred_inbound)
+            server_of = self.micro.assign_batch_all(obs, batch, region_of)
+        else:
+            activation = np.empty(r, np.int64)   # api array form
+            server_of = np.full(n, -1, np.int32)
+            for j in range(r):
+                activation[j] = self.micro.activation_target(
+                    obs, j, float(pred_inbound[j]))
+                idx = np.flatnonzero(region_of == j)
+                if idx.size:
+                    server_of[idx] = self.micro.assign_batch(obs, j, batch,
+                                                             idx)
         return BatchDecision(region=np.where(server_of >= 0, region_of, -1),
                              server=server_of, activation=activation)
 

@@ -19,6 +19,14 @@ inactive between decision and apply (activation/failures) replay the
 legacy per-task resolution loop exactly, so fallback interleaving stays
 bit-compatible with the frozen reference.
 
+``Engine(step_backend="jax")`` routes the grouped apply, warming
+progression, queue drain and power billing through the jitted
+``sim/engine_jax.py`` kernels (exact-metric parity with this numpy path,
+which remains the golden oracle; conflicts and inactive-target slots
+fall back here identically).  Pair with
+``TortaScheduler(micro_backend="fused")`` for the fused slot step —
+one multi-region scan dispatch per slot.
+
 Buffered (unassigned) rows age out after ``drop_after_slots`` no matter
 WHY they went unassigned — scheduler-buffered and resolve-failed tasks
 alike (the object engine exempted resolve-failed tasks, so a long
@@ -92,7 +100,8 @@ class Engine:
                  drop_after_slots: float = 12.0,
                  failures: Optional[List[FailureEvent]] = None,
                  seed: int = 0,
-                 batch_mode: Optional[bool] = None):
+                 batch_mode: Optional[bool] = None,
+                 step_backend: str = "numpy"):
         TaskBatch, as_source = _workload_api()
         self._TaskBatch = TaskBatch
         self.topo = topology
@@ -108,6 +117,13 @@ class Engine:
         self.batch_native = not isinstance(self.scheduler,
                                            LegacySchedulerAdapter)
         self.batch_mode = self.batch_native      # legacy alias
+        if step_backend not in ("numpy", "jax"):
+            raise ValueError(f"unknown step backend: {step_backend!r}")
+        self.step_backend = step_backend
+        self._stepper = None
+        if step_backend == "jax":
+            from repro.sim.engine_jax import JaxStepper
+            self._stepper = JaxStepper(self.state)
         self.slot_s = slot_seconds
         self.drop_after = drop_after_slots
         self.failures = failures or []
@@ -115,11 +131,27 @@ class Engine:
         self.metrics = MetricsAggregator(slot_seconds=slot_seconds)
         r = self.state.n_regions
         self.prev_alloc = np.full((r, r), 1.0 / r)
-        self.arrivals_hist: List[np.ndarray] = []
+        # realized arrivals as a preallocated growing (T, R) buffer —
+        # rebuilding np.stack(list) per slot was O(T^2) over a run
+        self._hist = np.zeros((64, r))
+        self._hist_n = 0
         self.pending_batch = TaskBatch.empty()   # cross-slot buffer
         self._failed: Dict[int, int] = {}   # region -> slots remaining
 
     # ------------------------------------------------------------------
+
+    @property
+    def arrivals_hist(self) -> List[np.ndarray]:
+        """Realized per-slot arrival vectors (legacy list-of-rows view)."""
+        return list(self._hist[:self._hist_n])
+
+    def _record_arrivals(self, counts: np.ndarray) -> None:
+        if self._hist_n == self._hist.shape[0]:
+            grown = np.zeros((2 * self._hist.shape[0], self._hist.shape[1]))
+            grown[:self._hist_n] = self._hist
+            self._hist = grown
+        self._hist[self._hist_n] = counts
+        self._hist_n += 1
 
     def _obs(self, t: int) -> SlotObs:
         st = self.state
@@ -127,8 +159,8 @@ class Engine:
         q_s = st.queue_by_region()
         q_n = self.pending_batch.origin_counts(r).astype(np.float64) \
             + q_s / np.maximum(self.slot_s, 1.0)
-        hist = (np.stack(self.arrivals_hist) if self.arrivals_hist
-                else np.zeros((0, r)))
+        hist = self._hist[:self._hist_n]
+        hist.setflags(write=False)       # rows already written are final
         return SlotObs(
             t=t, latency=self.topo.latency, capacities=st.capacities(),
             total_capacities=st.total_capacities(),
@@ -186,6 +218,9 @@ class Engine:
 
     def _progress_warming(self) -> None:
         """Warming servers progress toward ACTIVE (whole-array)."""
+        if self._stepper is not None:
+            self._stepper.progress_warming(self.slot_s)
+            return
         st = self.state
         warming = st.state == WARMING
         if warming.any():
@@ -301,21 +336,27 @@ class Engine:
             single_rows = rows[pos_single]
             gs = g[pos_single]
             mids = batch.model_idx[single_rows].astype(np.int64)
-            speed = np.maximum(st.tflops[gs] / 112.0, 0.1)
-            sw = st.switch_cost_rows(gs, mids)
-            switched = sw > 0
-            energy = np.where(switched,
-                              sw * st.power_w[gs] * SWITCH_POWER_FRAC, 0.0)
-            st.note_model_rows(gs, mids)
-            wk = batch.work_s[single_rows] / speed
-            wait[pos_single] = st.queue_s[gs] + sw
+            if self._stepper is not None:
+                # jitted grouped apply (bitwise-equal per-row channels)
+                sw, energy, wt, wk = self._stepper.apply_single_rows(
+                    gs, mids, batch.work_s[single_rows])
+                wait[pos_single] = wt
+            else:
+                speed = np.maximum(st.tflops[gs] / 112.0, 0.1)
+                sw = st.switch_cost_rows(gs, mids)
+                energy = np.where(sw > 0,
+                                  sw * st.power_w[gs] * SWITCH_POWER_FRAC,
+                                  0.0)
+                st.note_model_rows(gs, mids)
+                wk = batch.work_s[single_rows] / speed
+                wait[pos_single] = st.queue_s[gs] + sw
+                st.queue_s[gs] += sw + wk
             work[pos_single] = wk
             net[pos_single] = self.topo.latency[
                 batch.origin[single_rows], region[single_rows]] / 1000.0
-            st.queue_s[gs] += sw + wk
             energy_total += float(energy.sum())
             switch_total += float(sw.sum())
-            n_switches += int(np.count_nonzero(switched))
+            n_switches += int(np.count_nonzero(sw > 0))
 
         for p in pos_multi:
             i = int(rows[p])
@@ -382,20 +423,25 @@ class Engine:
         switch_cost_f = float(np.sum((alloc_n - self.prev_alloc) ** 2))
         self.prev_alloc = alloc_n
 
-        # drain queues + power accounting (whole-array)
-        act = st.active_mask()
-        busy = np.minimum(st.queue_s, self.slot_s)
-        new_util = busy / self.slot_s
-        st.util = np.where(act, new_util, st.util)
-        st.idle_slots = np.where(
-            act, np.where(st.util > 0.05, 0, st.idle_slots + 1),
-            st.idle_slots)
-        st.queue_s = np.where(
-            act, np.maximum(0.0, st.queue_s - self.slot_s), st.queue_s)
+        # drain queues + power accounting (whole-array; jitted when the
+        # jax step backend is selected — identical elementwise values)
+        if self._stepper is not None:
+            power_server, act = self._stepper.close_slot(self.slot_s)
+        else:
+            act = st.active_mask()
+            busy = np.minimum(st.queue_s, self.slot_s)
+            new_util = busy / self.slot_s
+            st.util = np.where(act, new_util, st.util)
+            st.idle_slots = np.where(
+                act, np.where(st.util > 0.05, 0, st.idle_slots + 1),
+                st.idle_slots)
+            st.queue_s = np.where(
+                act, np.maximum(0.0, st.queue_s - self.slot_s), st.queue_s)
+            power_server = np.where(
+                act, (0.1 + 0.9 * st.util) * st.power_w * self.slot_s, 0.0)
         utils = st.util[act]
-        # bill at regional prices
-        reg_j = st._segsum(np.where(
-            act, (0.1 + 0.9 * st.util) * st.power_w * self.slot_s, 0.0))
+        # bill at regional prices (host reduction: parity op order)
+        reg_j = st._segsum(power_server)
         cost = 0.0
         for j in range(r):                 # sequential (parity) — R small
             cost += reg_j[j] / 3.6e6 * st.power_price[j]
@@ -424,7 +470,7 @@ class Engine:
 
             new = (src.slot_batch(t) if t < src.n_slots
                    else TaskBatch.empty())
-            self.arrivals_hist.append(
+            self._record_arrivals(
                 new.origin_counts(r).astype(np.float64))
             # buffered tasks get first chance
             batch = TaskBatch.concat(self.pending_batch, new)

@@ -1,0 +1,245 @@
+"""Jitted engine slot step — the device-resident half of the fused path.
+
+``EngineStep`` is a jax pytree view of ``ClusterState``'s dynamic columns
+(state codes, warming clocks, queues, utilization, idle counters, MRU
+model cache) plus the static hardware facts the step math needs.  Three
+jitted kernels cover the interpreted engine surface:
+
+* :func:`warm_step` — warming progression (``Engine._progress_warming``);
+* :func:`apply_single` — the grouped decision apply for servers that
+  receive exactly ONE task this slot: switch cost + energy, MRU update,
+  queue push and the wait/work decomposition, all inside one dispatch;
+* :func:`close_step` — queue drain, utilization/idle bookkeeping and the
+  per-server power draw of ``Engine._finish_slot``.
+
+Every op mirrors the numpy engine's float64 expression order bitwise
+(elementwise IEEE ops only — reductions such as the per-region power sum
+and the metrics totals stay on the host over the returned arrays, so the
+accumulation order is literally the numpy engine's).  Same-server
+conflicts and slots whose targeted server went inactive keep falling back
+to the numpy path exactly as ``Engine._apply_decision`` does; the numpy
+engine remains the golden-parity oracle (``Engine(step_backend="jax")``
+selects this module, ``tests/test_fused_step.py`` pins exact-metric
+trajectory parity).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from repro.sim.cluster import SWITCH_POWER_FRAC
+from repro.sim.state import (ACTIVE, NO_MODEL, WARM_SLOTS, WARMING,
+                             ClusterState, _WARM_HIT_S)
+
+
+def _model_switch_s() -> float:
+    from repro.sim.cluster import MODEL_SWITCH_S
+    return MODEL_SWITCH_S
+
+
+def static_arrays(st: ClusterState):
+    """The step's static hardware triple as device arrays.  ``speed`` is
+    precomputed with host numpy: XLA rewrites division by the literal
+    112.0 into a multiply-by-reciprocal, a last-ulp divergence from the
+    numpy engine's true division."""
+    return (jnp.asarray(np.maximum(st.tflops / 112.0, 0.1)),
+            jnp.asarray(st.power_w), jnp.asarray(st.switch_scale))
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["state", "warm_remaining_s", "queue_s", "util",
+                      "idle_slots", "current_model", "warm_models",
+                      "speed", "power_w", "switch_scale"],
+         meta_fields=[])
+@dataclasses.dataclass
+class EngineStep:
+    """Pytree view of ``ClusterState`` for the jitted slot step."""
+
+    # dynamic columns (written back after each jitted call)
+    state: jax.Array             # (S,) int8
+    warm_remaining_s: jax.Array  # (S,) float64
+    queue_s: jax.Array           # (S,) float64
+    util: jax.Array              # (S,) float64
+    idle_slots: jax.Array        # (S,) int64
+    current_model: jax.Array     # (S,) int16
+    warm_models: jax.Array       # (S, W) int16
+    # static hardware facts (read-only).  ``speed`` is precomputed on the
+    # host: XLA rewrites division by the literal 112.0 into a
+    # multiply-by-reciprocal, which is a last-ulp divergence from the
+    # numpy engine's true division — host numpy keeps parity bitwise.
+    speed: jax.Array             # (S,) float64 max(tflops/112, 0.1)
+    power_w: jax.Array           # (S,) float64
+    switch_scale: jax.Array      # (S,) float64
+
+    @classmethod
+    def from_state(cls, st: ClusterState,
+                   statics=None) -> "EngineStep":
+        """Build the view from a numpy ``ClusterState``.  ``statics`` is
+        an optional cached ``(speed, power_w, switch_scale)`` device
+        triple (``JaxStepper`` uploads it once per run)."""
+        if statics is None:
+            statics = static_arrays(st)
+        speed, power_w, switch_scale = statics
+        return cls(
+            state=jnp.asarray(st.state),
+            warm_remaining_s=jnp.asarray(st.warm_remaining_s),
+            queue_s=jnp.asarray(st.queue_s),
+            util=jnp.asarray(st.util),
+            idle_slots=jnp.asarray(st.idle_slots),
+            current_model=jnp.asarray(st.current_model),
+            warm_models=jnp.asarray(st.warm_models),
+            speed=speed, power_w=power_w, switch_scale=switch_scale)
+
+    def write_back(self, st: ClusterState,
+                   fields=("state", "warm_remaining_s", "queue_s", "util",
+                           "idle_slots", "current_model",
+                           "warm_models")) -> None:
+        """Sync dynamic columns into the numpy ``ClusterState`` (the host
+        mirror the schedulers/oracle fallback read); callers narrow
+        ``fields`` to the columns their kernel actually wrote."""
+        for name in fields:
+            getattr(st, name)[...] = np.asarray(getattr(self, name))
+
+
+@jax.jit
+def warm_step(step: EngineStep, slot_s) -> EngineStep:
+    """Warming servers progress toward ACTIVE (whole-array, exact
+    ``Engine._progress_warming`` semantics)."""
+    warming = step.state == WARMING
+    rem = jnp.where(warming, step.warm_remaining_s - slot_s,
+                    step.warm_remaining_s)
+    done = warming & (rem <= 0)
+    return dataclasses.replace(
+        step,
+        state=jnp.where(done, jnp.int8(ACTIVE), step.state),
+        warm_remaining_s=jnp.where(done, 0.0, rem))
+
+
+@jax.jit
+def apply_single(step: EngineStep, gs, mids, work_raw, valid):
+    """Grouped apply for servers receiving exactly one task: returns the
+    updated step plus the per-row (switch s, energy J, wait s, work s)
+    channels.  Rows are padded to a shape bucket; padded rows carry
+    ``gs == n_servers`` and scatter with ``mode="drop"``."""
+    speed = step.speed[gs]
+    rows = step.warm_models[gs]                       # (K, W) int16
+    warm_hit = (rows == mids[:, None]).any(axis=1)
+    cost = jnp.where(warm_hit, step.switch_scale[gs] * _WARM_HIT_S,
+                     step.switch_scale[gs] * _model_switch_s())
+    sw = jnp.where(step.current_model[gs] == mids, 0.0, cost)
+    sw = jnp.where(valid, sw, 0.0)
+    energy = jnp.where(sw > 0,
+                       sw * step.power_w[gs] * SWITCH_POWER_FRAC, 0.0)
+    wk = jnp.where(valid, work_raw / speed, 0.0)
+    wait = jnp.where(valid, step.queue_s[gs] + sw, 0.0)
+
+    # MRU model-cache update (``ClusterState.note_model_rows``)
+    mids16 = mids.astype(step.current_model.dtype)
+    keep = (rows != mids16[:, None]) & (rows != NO_MODEL)
+    order = jnp.argsort(~keep, axis=1, stable=True)
+    kept = jnp.take_along_axis(rows, order, axis=1)
+    n_keep = keep.sum(axis=1)
+    cols = [mids16]
+    for k in range(WARM_SLOTS - 1):
+        cols.append(jnp.where(n_keep > k, kept[:, k],
+                              jnp.int16(NO_MODEL)).astype(rows.dtype))
+    new_warm = jnp.stack(cols, axis=1)
+
+    step = dataclasses.replace(
+        step,
+        queue_s=step.queue_s.at[gs].add(sw + wk, mode="drop"),
+        current_model=step.current_model.at[gs].set(mids16, mode="drop"),
+        warm_models=step.warm_models.at[gs].set(new_warm, mode="drop"))
+    return step, sw, energy, wait, wk
+
+
+@jax.jit
+def close_step(step: EngineStep, slot_s):
+    """Queue drain + utilization/idle bookkeeping + per-server power
+    draw (``Engine._finish_slot``'s whole-array block).  The per-region
+    power reduction stays on the host (``ClusterState._segsum``'s
+    sequential-within-segment order is the parity contract)."""
+    act = step.state == ACTIVE
+    busy = jnp.minimum(step.queue_s, slot_s)
+    util = jnp.where(act, busy / slot_s, step.util)
+    idle = jnp.where(act, jnp.where(util > 0.05, 0, step.idle_slots + 1),
+                     step.idle_slots)
+    queue = jnp.where(act, jnp.maximum(0.0, step.queue_s - slot_s),
+                      step.queue_s)
+    power_j = jnp.where(act, (0.1 + 0.9 * util) * step.power_w * slot_s,
+                        0.0)
+    return dataclasses.replace(step, queue_s=queue, util=util,
+                               idle_slots=idle), power_j, act
+
+
+def row_bucket(n: int) -> int:
+    """Pad size for per-slot row channels (single-task servers): powers
+    of two — a handful of compiled shapes per run."""
+    return 1 << max(int(n - 1).bit_length(), 4)
+
+
+class JaxStepper:
+    """Host-side driver for the jitted step: owns the ``EngineStep``
+    view, pads/buckets the per-slot row channels and writes results back
+    into the numpy ``ClusterState`` mirror after each dispatch.  The
+    static hardware arrays are uploaded once and reused across every
+    dispatch of the run; only the dynamic columns each kernel touches
+    round-trip."""
+
+    def __init__(self, state: ClusterState):
+        self.state = state
+        self._static = None
+
+    def _make_step(self) -> EngineStep:
+        if self._static is None:
+            with enable_x64(True):
+                self._static = static_arrays(self.state)
+        return EngineStep.from_state(self.state, self._static)
+
+    def progress_warming(self, slot_s: float) -> None:
+        st = self.state
+        if not (st.state == WARMING).any():
+            return
+        with enable_x64(True):
+            step = warm_step(self._make_step(),
+                             jnp.asarray(np.float64(slot_s)))
+            step.write_back(st, fields=("state", "warm_remaining_s"))
+
+    def apply_single_rows(self, gs: np.ndarray, mids: np.ndarray,
+                          work_raw: np.ndarray):
+        """Apply one task to each (distinct) server ``gs[k]``; returns
+        (switch s, energy J, wait s, work s) per row, bitwise equal to
+        the numpy grouped apply."""
+        st = self.state
+        k = gs.size
+        pad = row_bucket(k) - k
+        s_total = st.n_servers
+        gs_p = np.pad(gs.astype(np.int64), (0, pad),
+                      constant_values=s_total)      # OOB -> dropped
+        mids_p = np.pad(mids.astype(np.int32), (0, pad))
+        work_p = np.pad(work_raw.astype(np.float64), (0, pad))
+        valid = np.pad(np.ones(k, bool), (0, pad))
+        with enable_x64(True):
+            step, sw, energy, wait, wk = apply_single(
+                self._make_step(), jnp.asarray(gs_p),
+                jnp.asarray(mids_p), jnp.asarray(work_p),
+                jnp.asarray(valid))
+            step.write_back(st, fields=("queue_s", "current_model",
+                                        "warm_models"))
+            return (np.asarray(sw)[:k], np.asarray(energy)[:k],
+                    np.asarray(wait)[:k], np.asarray(wk)[:k])
+
+    def close_slot(self, slot_s: float):
+        """Drain/bill the slot; returns the per-server power draw (J)
+        and active mask for the host-side regional reduction."""
+        st = self.state
+        with enable_x64(True):
+            step, power_j, act = close_step(
+                self._make_step(), jnp.asarray(np.float64(slot_s)))
+            step.write_back(st, fields=("queue_s", "util", "idle_slots"))
+            return np.asarray(power_j), np.asarray(act)
