@@ -15,7 +15,28 @@ import numpy as np
 
 RESULTS_DIR = pathlib.Path(__file__).resolve().parent / "results"
 
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
 TOPOLOGIES = ["abilene", "polska", "gabriel", "cost2"]
+
+
+def provenance() -> Dict:
+    """Reproducibility stamp for benchmark artifacts: runtime environment
+    (python/jax/backend/devices/cpu count), the git SHA of the tree that
+    produced the numbers, and the wall-clock time of the run.  Every
+    ``BENCH_*.json`` embeds this under a ``"provenance"`` key."""
+    from repro.obs.report import environment_info
+    info = dict(environment_info())
+    info["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S%z")
+    try:
+        import subprocess
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=REPO_ROOT, timeout=10,
+            capture_output=True, text=True)
+        info["git_sha"] = sha.stdout.strip() if sha.returncode == 0 else None
+    except Exception:                      # no git binary / not a checkout
+        info["git_sha"] = None
+    return info
 
 
 def make_schedulers(n_regions: int, extra: Optional[dict] = None):
@@ -34,13 +55,19 @@ def make_schedulers(n_regions: int, extra: Optional[dict] = None):
 
 def run_matrix(*, slots: int = 120, seeds=(0,), util: float = 0.35,
                topologies=None, schedulers=None, failures=None,
-               scenario: Optional[str] = None,
+               scenario: Optional[str] = None, obs=None,
                verbose: bool = True) -> Dict:
     """Returns {topology: {scheduler: summary-dict-with-extras}}.
 
     ``scenario=None`` keeps the historical legacy diurnal workload (stable
     figure baselines); any registered scenario name switches the matrix to
-    the streaming workload subsystem (``repro.workload.make_source``)."""
+    the streaming workload subsystem (``repro.workload.make_source``).
+
+    ``obs`` is an observability spec forwarded to every ``Engine``
+    (``repro.obs.make_obs`` shapes: ``None``/``True`` = default counters,
+    ``"trace"`` = + phase spans, ``False`` = off).  When a run produced a
+    report its counter totals ride along under each summary's ``"obs"``
+    key (first seed only — counters are per-run, not mergeable means)."""
     from repro.sim import Engine, make_cluster_state, make_topology, make_workload
     from repro.sim.cluster import throughput_per_slot
     from repro.workload import make_source
@@ -65,10 +92,12 @@ def run_matrix(*, slots: int = 120, seeds=(0,), util: float = 0.35,
                 cl = cluster0.copy()
                 t0 = time.time()
                 eng = Engine(topo, cl, wl, sched, seed=4 + seed,
-                             failures=failures)
+                             failures=failures, obs=obs)
                 agg = eng.run()
                 s = agg.summary()
                 s["decision_time_s"] = time.time() - t0
+                if eng.run_report is not None:
+                    s["obs"] = {"counters": eng.run_report.counters}
                 s["response_times"] = np.percentile(
                     agg.response_times, [5, 25, 50, 75, 90, 95, 99]).tolist()
                 s["lb_series"] = [float(x) for x in agg.lb_by_slot[::4]]

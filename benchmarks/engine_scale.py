@@ -31,11 +31,19 @@ multi-region scan (``micro_backend="fused"``) + the jitted engine step
 (``step_backend="jax"``) — against the numpy and per-region-jax
 generations at 15x200 and 25x500, and emits ``BENCH_fused_step.json``.
 
+Every emitted JSON embeds a ``"provenance"`` stamp (environment, git SHA,
+wall-clock) from ``benchmarks.common.provenance``.  ``--obs`` runs the
+fused config once more with phase tracing on, prints the span summary
+table and fallback/retrace counters, and exports the full ``RunReport``
+under ``benchmarks/results/``.  ``--toy`` shrinks every config to a
+seconds-scale smoke (used by CI) and skips the ``BENCH_*.json`` writes so
+toy numbers never clobber the tracked perf trajectory.
+
     PYTHONPATH=src python benchmarks/engine_scale.py [--quick]
     PYTHONPATH=src python benchmarks/engine_scale.py --workload-only
     PYTHONPATH=src python benchmarks/engine_scale.py --baselines-only
     PYTHONPATH=src python benchmarks/engine_scale.py --micro-only
-    PYTHONPATH=src python benchmarks/engine_scale.py --fused-only
+    PYTHONPATH=src python benchmarks/engine_scale.py --fused-only [--obs]
 """
 from __future__ import annotations
 
@@ -46,6 +54,11 @@ import time
 
 import networkx as nx
 import numpy as np
+
+try:
+    from benchmarks.common import provenance
+except ImportError:          # run as a script: benchmarks/ is sys.path[0]
+    from common import provenance
 
 OUT_PATH = pathlib.Path(__file__).resolve().parent.parent \
     / "BENCH_engine_scale.json"
@@ -64,6 +77,22 @@ CONFIGS = [
     (15, 200, 8, 2),
     (25, 500, 4, 1),
 ]
+
+# --toy: every benchmark shrinks to a seconds-scale smoke and artifact
+# writes are skipped (CI runs this; toy numbers must never overwrite the
+# tracked BENCH_*.json perf trajectory)
+TOY = False
+
+
+def emit(path: pathlib.Path, out: dict) -> None:
+    """Stamp provenance and write the benchmark artifact (skipped under
+    ``--toy``, where the numbers are smoke-scale)."""
+    out["provenance"] = provenance()
+    if TOY:
+        print(f"toy mode: skipping write of {path.name}")
+        return
+    path.write_text(json.dumps(out, indent=1))
+    print(f"wrote {path}")
 
 WL_CONFIGS = [
     # (regions, servers/region, legacy slots, streaming slots)
@@ -239,8 +268,7 @@ def bench_baselines() -> None:
            "workload": "flash_crowd scenario (StreamingWorkload)",
            "paths": "native schedule_batch vs LegacySchedulerAdapter",
            "rows": rows}
-    BL_OUT_PATH.write_text(json.dumps(out, indent=1))
-    print(f"wrote {BL_OUT_PATH}")
+    emit(BL_OUT_PATH, out)
 
 
 MICRO_CONFIGS = [
@@ -298,8 +326,7 @@ def bench_micro() -> None:
                      "(first run pays per-shape jit compiles)",
            "utilization": 0.35,
            "rows": rows}
-    MJ_OUT_PATH.write_text(json.dumps(out, indent=1))
-    print(f"wrote {MJ_OUT_PATH}")
+    emit(MJ_OUT_PATH, out)
 
 
 FUSED_CONFIGS = [
@@ -309,12 +336,16 @@ FUSED_CONFIGS = [
 ]
 
 
-def bench_fused() -> None:
+def bench_fused(obs: bool = False) -> None:
     """The fused device-resident slot step head to head with the two
     prior generations: numpy micro backend, per-region jitted scans
     (``micro_backend="jax"``), and the fused multi-region scan + jitted
     engine step (``micro_backend="fused"`` + ``step_backend="jax"``) —
-    emits ``BENCH_fused_step.json``."""
+    emits ``BENCH_fused_step.json``.  The default-on counters stay live
+    during the timed runs (their overhead is part of the number) and each
+    fused row carries its counter totals.  ``obs=True`` adds one traced
+    fused run per config: span summary table on stdout + a full
+    ``RunReport`` JSON under ``benchmarks/results/``."""
     from repro.core.torta import TortaScheduler
     from repro.sim import Engine, make_cluster_state, make_workload
     from repro.sim.cluster import throughput_per_slot
@@ -336,20 +367,23 @@ def bench_fused() -> None:
             # timed run measures steady state
             if warmup:
                 mk_engine().run(slots)
+            eng = mk_engine()
             t0 = time.time()
-            mk_engine().run(slots)
-            return (time.time() - t0) / slots
+            eng.run(slots)
+            return (time.time() - t0) / slots, eng
 
-        dt_np = timed(lambda: Engine(topo, st.copy(), wl,
-                                     TortaScheduler(r, seed=0)), s_np)
-        dt_jx = timed(lambda: Engine(
+        def mk_fused(obs_spec=None):
+            return Engine(topo, st.copy(), wl,
+                          TortaScheduler(r, seed=0, micro_backend="fused"),
+                          step_backend="jax", obs=obs_spec)
+
+        dt_np, _ = timed(lambda: Engine(topo, st.copy(), wl,
+                                        TortaScheduler(r, seed=0)), s_np)
+        dt_jx, _ = timed(lambda: Engine(
             topo, st.copy(), wl,
             TortaScheduler(r, seed=0, micro_backend="jax")), s_jx,
             warmup=True)
-        dt_fu = timed(lambda: Engine(
-            topo, st.copy(), wl,
-            TortaScheduler(r, seed=0, micro_backend="fused"),
-            step_backend="jax"), s_fu, warmup=True)
+        dt_fu, eng_fu = timed(mk_fused, s_fu, warmup=True)
 
         row = {"regions": r, "servers_per_region": spr,
                "servers": st.n_servers, "tasks_per_slot": n_tasks_slot,
@@ -357,11 +391,28 @@ def bench_fused() -> None:
                "fused_s_per_slot": dt_fu,
                "fused_speedup_vs_jax": dt_jx / dt_fu,
                "fused_speedup_vs_numpy": dt_np / dt_fu}
+        if eng_fu.run_report is not None:
+            row["fused_counters"] = eng_fu.run_report.counters
         print(f"  numpy {dt_np:7.2f}  per-region-jax {dt_jx:7.2f}  "
               f"fused {dt_fu:7.2f} s/slot  "
               f"-> {row['fused_speedup_vs_jax']:.1f}x vs jax, "
               f"{row['fused_speedup_vs_numpy']:.1f}x vs numpy", flush=True)
         rows.append(row)
+
+        if obs:
+            # one traced run: spans + counters + the full RunReport
+            eng_t = mk_fused("trace")
+            eng_t.run(s_fu)
+            rep = eng_t.run_report
+            print(f"  -- traced fused run ({r}x{spr}) span summary --")
+            print(eng_t.obs.tracer.summary_table())
+            for key in sorted(rep.counters):
+                print(f"  {key} = {rep.counters[key]}")
+            out_dir = pathlib.Path(__file__).resolve().parent / "results"
+            out_dir.mkdir(parents=True, exist_ok=True)
+            rep_path = out_dir / f"runreport_fused_{r}x{spr}.json"
+            rep.save(rep_path)
+            print(f"  run report -> {rep_path}", flush=True)
 
     out = {"benchmark": "fused_step",
            "scheduler": "TORTA; numpy vs per-region jax scans vs fused "
@@ -371,8 +422,7 @@ def bench_fused() -> None:
                      "second run (first run pays per-shape compiles)",
            "utilization": 0.35,
            "rows": rows}
-    FS_OUT_PATH.write_text(json.dumps(out, indent=1))
-    print(f"wrote {FS_OUT_PATH}")
+    emit(FS_OUT_PATH, out)
 
 
 def run_workload_bench() -> None:
@@ -397,8 +447,7 @@ def run_workload_bench() -> None:
            "utilization": 0.35,
            "rows": rows,
            "multiday_stream": md}
-    WL_OUT_PATH.write_text(json.dumps(out, indent=1))
-    print(f"wrote {WL_OUT_PATH}")
+    emit(WL_OUT_PATH, out)
 
 
 def main() -> None:
@@ -414,7 +463,22 @@ def main() -> None:
     ap.add_argument("--fused-only", action="store_true",
                     help="only run the fused-slot-step benchmark "
                          "(numpy vs per-region-jax vs fused)")
+    ap.add_argument("--obs", action="store_true",
+                    help="add a traced fused run per config: span summary "
+                         "table + RunReport JSON under benchmarks/results/")
+    ap.add_argument("--toy", action="store_true",
+                    help="shrink every config to a seconds-scale smoke "
+                         "and skip BENCH_*.json writes (CI)")
     args = ap.parse_args()
+
+    if args.toy:
+        global TOY
+        TOY = True
+        CONFIGS[:] = [(3, 8, 3, 1)]
+        WL_CONFIGS[:] = [(3, 8, 3, 8)]
+        BL_CONFIGS[:] = [(3, 8, 2, 0.10)]
+        MICRO_CONFIGS[:] = [(3, 8, 2, 2)]
+        FUSED_CONFIGS[:] = [(3, 8, 2, 2, 3)]
 
     if args.baselines_only:
         bench_baselines()
@@ -423,7 +487,7 @@ def main() -> None:
         bench_micro()
         return
     if args.fused_only:
-        bench_fused()
+        bench_fused(obs=args.obs)
         return
 
     if not args.workload_only:
@@ -443,8 +507,7 @@ def main() -> None:
                "scheduler": "TORTA (numpy micro backend)",
                "utilization": 0.35,
                "rows": rows}
-        OUT_PATH.write_text(json.dumps(out, indent=1))
-        print(f"wrote {OUT_PATH}")
+        emit(OUT_PATH, out)
 
     run_workload_bench()
     if not args.workload_only:

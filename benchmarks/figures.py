@@ -61,3 +61,27 @@ def fig11_breakdown(matrix: Dict) -> str:
     return fmt_table(["topology", "scheduler", "wait_s", "inference_s",
                       "network_s", "completion"], rows,
                      "Fig 11 — response-time breakdown")
+
+
+def obs_timeseries_table(report, every: int = 8) -> str:
+    """Per-slot telemetry from a ``repro.obs`` RunReport: windowed
+    response percentiles, queue depth, drop rate and mean regional
+    saturation, sampled every ``every`` slots (plus the final slot)."""
+    import numpy as np
+    slot = report.series_array("slot")
+    p50 = report.series_array("p50_response_s")
+    p95 = report.series_array("p95_response_s")
+    depth = report.series_array("queue_depth")
+    drop = report.series_array("drop_rate")
+    sat = report.series_array("saturation")
+    rows = []
+    picks = sorted(set(range(0, len(slot), every)) | {len(slot) - 1})
+    for t in picks:
+        if t < 0:
+            continue
+        rows.append([int(slot[t]), f"{p50[t]:.2f}", f"{p95[t]:.2f}",
+                     f"{depth[t]:.1f}", f"{drop[t]:.3f}",
+                     f"{float(np.mean(sat[t])):.3f}"])
+    return fmt_table(["slot", "p50_resp_s", "p95_resp_s", "queue_depth",
+                      "drop_rate", "mean_saturation"], rows,
+                     "Engine telemetry — per-slot time series")

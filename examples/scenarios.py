@@ -7,7 +7,11 @@ allocation behaves outside the single sine wave the paper plots.  No
 legacy ``Task`` objects appear anywhere in the slot cycle: each engine run
 asserts ``batch_native``.
 
-    PYTHONPATH=src python examples/scenarios.py [--slots 96]
+``--obs`` demonstrates reading a run report: the TORTA flash_crowd run is
+re-run with phase tracing on and its ``RunReport`` — summary + counters +
+span table + per-slot time series — is unpacked on stdout.
+
+    PYTHONPATH=src python examples/scenarios.py [--slots 96] [--obs]
 """
 import argparse
 
@@ -31,9 +35,56 @@ def make_schedulers(r):
             ("MILP", MilpScheduler(r))]
 
 
+def show_run_report(topo, state, rate, slots):
+    """Reading a run report, end to end.
+
+    ``Engine(..., obs="trace")`` keeps the default counters AND records
+    phase spans; after ``run()`` the engine exposes ``run_report`` — a
+    ``repro.obs.report.RunReport`` with four sections:
+
+    * ``rep.summary``  — the usual ``MetricsAggregator.summary()`` dict
+      (bitwise-identical to an obs-off run; observation never perturbs);
+    * ``rep.counters`` — flat ``name{labels} -> int`` totals (jit
+      retraces per shape bucket, numpy-fallback activations, host syncs,
+      task flow);
+    * ``rep.spans``    — per-phase wall-clock rows (also pretty-printed
+      by ``engine.obs.tracer.summary_table()``);
+    * ``rep.series``   — per-slot time series (windowed p50/p95/p99
+      response, queue depth, drops, per-region saturation, arrivals vs
+      predictor forecast) via ``rep.series_array(key)``.
+    """
+    src = make_source("flash_crowd", slots, topo.n_regions, seed=2,
+                      base_rate=rate)
+    eng = Engine(topo, state.copy(), src,
+                 TortaScheduler(topo.n_regions, seed=0), seed=4,
+                 obs="trace")
+    eng.run()
+    rep = eng.run_report
+
+    print("\n== run report: TORTA / flash_crowd ==")
+    print(f"completed={rep.summary['completed']:.0f} "
+          f"mean_resp={rep.summary['mean_response_s']:.2f}s")
+    print("\n-- spans --")
+    print(eng.obs.tracer.summary_table())
+    print("\n-- counters --")
+    for key in sorted(rep.counters):
+        print(f"  {key} = {rep.counters[key]}")
+    p95 = rep.series_array("p95_response_s")
+    depth = rep.series_array("queue_depth")
+    print("\n-- series (last 5 slots) --")
+    print("  slot  p95_resp_s  queue_depth")
+    for t in range(max(0, len(p95) - 5), len(p95)):
+        print(f"  {t:4d}  {p95[t]:10.2f}  {depth[t]:11.1f}")
+    print("\nexport: rep.save(path) / eng.obs.timeseries() / "
+          "eng.obs.prometheus_text()")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--slots", type=int, default=96)
+    ap.add_argument("--obs", action="store_true",
+                    help="re-run TORTA on flash_crowd with tracing on and "
+                         "walk through its RunReport")
     args = ap.parse_args()
 
     topo = make_topology("abilene", seed=1)
@@ -69,6 +120,9 @@ def main():
     print("-|-".join("-" * w for w in widths))
     for row in rows:
         print(" | ".join(c.ljust(widths[i]) for i, c in enumerate(row)))
+
+    if args.obs:
+        show_run_report(topo, state, rate, args.slots)
 
 
 if __name__ == "__main__":

@@ -20,6 +20,8 @@ from typing import (Any, Dict, List, Optional, Protocol, Tuple, Union,
 
 import numpy as np
 
+from repro.obs import runtime as obs_rt
+
 ActivationLike = Union[None, Dict[int, int], np.ndarray]
 
 
@@ -89,13 +91,19 @@ class BatchDecision:
     def to_host(self) -> "BatchDecision":
         """Materialize device-array channels as host numpy (in place);
         no-op for numpy-backed decisions.  Returns self for chaining."""
+        synced = False
         if _is_device_array(self.region):
             self.region = np.asarray(self.region)
+            synced = True
         if _is_device_array(self.server):
             self.server = np.asarray(self.server)
+            synced = True
         if self.activation is not None \
                 and _is_device_array(self.activation):
             self.activation = np.asarray(self.activation)
+            synced = True
+        if synced:
+            obs_rt.count("decision.host_sync")
         return self
 
     def validate(self, n_tasks: int, state) -> "BatchDecision":

@@ -33,6 +33,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.micro_state import LocalityState
+from repro.obs import runtime as obs_rt
 from repro.sim.engine import SlotObs
 from repro.sim.state import ACTIVE, MODEL_NAMES, ClusterState, model_id
 from repro.sim.workload import Task
@@ -379,24 +380,28 @@ class MicroAllocator:
         arrays, and runs the shared array core."""
         if not tasks:
             return {}
-        # urgency (deadline) first, then resource-intensive first
-        ordered = sorted(tasks, key=lambda tk: (tk.deadline_slot, tk.model,
-                                                -tk.work_s))
-        edim = next((tk.embed.shape[0] for tk in ordered
-                     if tk.embed is not None), 1)
-        embeds = np.stack([tk.embed if tk.embed is not None
-                           else np.zeros(edim, np.float32)
-                           for tk in ordered])
-        servers = self._assign_core(
-            obs, ridx,
-            mem_t=np.array([tk.mem_gb for tk in ordered]),
-            work=np.array([tk.work_s for tk in ordered]),
-            mids=np.array([model_id(tk.model) for tk in ordered], np.int16),
-            kind_ids=np.array([_KIND_IDX[tk.kind] for tk in ordered],
-                              np.int8),
-            embeds=embeds,
-            has_embed=np.array([tk.embed is not None for tk in ordered]),
-            norms=np.linalg.norm(embeds, axis=1))
+        with obs_rt.span("micro.assign"):
+            # urgency (deadline) first, then resource-intensive first
+            ordered = sorted(tasks,
+                             key=lambda tk: (tk.deadline_slot, tk.model,
+                                             -tk.work_s))
+            edim = next((tk.embed.shape[0] for tk in ordered
+                         if tk.embed is not None), 1)
+            embeds = np.stack([tk.embed if tk.embed is not None
+                               else np.zeros(edim, np.float32)
+                               for tk in ordered])
+            servers = self._assign_core(
+                obs, ridx,
+                mem_t=np.array([tk.mem_gb for tk in ordered]),
+                work=np.array([tk.work_s for tk in ordered]),
+                mids=np.array([model_id(tk.model) for tk in ordered],
+                              np.int16),
+                kind_ids=np.array([_KIND_IDX[tk.kind] for tk in ordered],
+                                  np.int8),
+                embeds=embeds,
+                has_embed=np.array([tk.embed is not None
+                                    for tk in ordered]),
+                norms=np.linalg.norm(embeds, axis=1))
         return {tk.id: ((ridx, int(s)) if s >= 0 else None)
                 for tk, s in zip(ordered, servers)}
 
@@ -415,21 +420,23 @@ class MicroAllocator:
         if rows.size == 0:
             return out
         self._dev_region_sizes = obs.state.region_sizes()
-        # one global sort: region-major, then each region's greedy order
-        # (deadline, model name, -work) — stable-chain equal to the
-        # per-region lexsort of assign_batch
-        work = batch.work_s[rows]
-        order = np.lexsort((-work, _MODEL_RANK[batch.model_idx[rows]],
-                            batch.deadline_slot[rows], region_of[rows]))
-        sidx = rows[order]
-        embeds = batch.embeds[sidx]
-        norms = np.linalg.norm(embeds, axis=1)
-        out[sidx] = assign_scan_all(
-            self, obs, region_of[sidx],
-            mem_t=batch.mem_gb[sidx], work=work[order],
-            mids=batch.model_idx[sidx].astype(np.int16),
-            kind_ids=batch.kind_id[sidx], embeds=embeds,
-            has_embed=norms > 0.0, norms=norms)
+        with obs_rt.span("micro.assign"):
+            # one global sort: region-major, then each region's greedy
+            # order (deadline, model name, -work) — stable-chain equal to
+            # the per-region lexsort of assign_batch
+            work = batch.work_s[rows]
+            order = np.lexsort((-work, _MODEL_RANK[batch.model_idx[rows]],
+                                batch.deadline_slot[rows],
+                                region_of[rows]))
+            sidx = rows[order]
+            embeds = batch.embeds[sidx]
+            norms = np.linalg.norm(embeds, axis=1)
+            out[sidx] = assign_scan_all(
+                self, obs, region_of[sidx],
+                mem_t=batch.mem_gb[sidx], work=work[order],
+                mids=batch.model_idx[sidx].astype(np.int16),
+                kind_ids=batch.kind_id[sidx], embeds=embeds,
+                has_embed=norms > 0.0, norms=norms)
         return out
 
     def assign_batch(self, obs: SlotObs, ridx: int, batch,
@@ -440,23 +447,25 @@ class MicroAllocator:
         idx = np.asarray(idx)
         if idx.size == 0:
             return np.zeros(0, np.int32)
-        work = batch.work_s[idx]
-        # same ordering as the object path: (deadline, model name, -work)
-        order = np.lexsort((-work, _MODEL_RANK[batch.model_idx[idx]],
-                            batch.deadline_slot[idx]))
-        sidx = idx[order]
-        embeds = batch.embeds[sidx]
-        norms = np.linalg.norm(embeds, axis=1)
-        servers = self._assign_core(
-            obs, ridx,
-            mem_t=batch.mem_gb[sidx], work=work[order],
-            mids=batch.model_idx[sidx].astype(np.int16),
-            kind_ids=batch.kind_id[sidx], embeds=embeds,
-            # a zero row is TaskBatch's encoding of "no embedding"
-            # (from_tasks of embed=None tasks) — match the object path
-            has_embed=norms > 0.0, norms=norms)
-        out = np.full(idx.size, -1, np.int32)
-        out[order] = servers
+        with obs_rt.span("micro.assign"):
+            work = batch.work_s[idx]
+            # same ordering as the object path:
+            # (deadline, model name, -work)
+            order = np.lexsort((-work, _MODEL_RANK[batch.model_idx[idx]],
+                                batch.deadline_slot[idx]))
+            sidx = idx[order]
+            embeds = batch.embeds[sidx]
+            norms = np.linalg.norm(embeds, axis=1)
+            servers = self._assign_core(
+                obs, ridx,
+                mem_t=batch.mem_gb[sidx], work=work[order],
+                mids=batch.model_idx[sidx].astype(np.int16),
+                kind_ids=batch.kind_id[sidx], embeds=embeds,
+                # a zero row is TaskBatch's encoding of "no embedding"
+                # (from_tasks of embed=None tasks) — match the object path
+                has_embed=norms > 0.0, norms=norms)
+            out = np.full(idx.size, -1, np.int32)
+            out[order] = servers
         return out
 
     def _assign_core(self, obs: SlotObs, ridx: int, *, mem_t: np.ndarray,

@@ -34,6 +34,7 @@ import numpy as np
 from jax.experimental import enable_x64
 
 from repro.core.micro_state import EMPTY, LocalityState
+from repro.obs import runtime as obs_rt
 
 _F64 = jnp.float64
 
@@ -210,6 +211,11 @@ def assign_scan(alloc, obs, ridx: int, lstate: LocalityState, *,
 
     n_pad = bucket(n)
     pad = n_pad - n
+    s_total = sl.stop - sl.start
+    # the jit cache is keyed by operand shapes: first sighting of a
+    # (N_pad, S) bucket this run is the trace/compile
+    obs_rt.count_new_shape("micro.retrace.scan", f"{n_pad}x{s_total}")
+    obs_rt.count("micro.host_sync.scan")
 
     def padf(a, fill=0.0):
         width = ((0, pad),) + ((0, 0),) * (a.ndim - 1)
@@ -473,6 +479,8 @@ def assign_scan_all(alloc, obs, ridx_rows: np.ndarray, *, mem_t, work, mids,
 
     counts = np.bincount(ridx_rows, minlength=r)
     n_pad = bucket(int(counts.max()))
+    obs_rt.count_new_shape("micro.retrace.scan_all",
+                           f"{r}x{n_pad}x{s_pad}x{rings.embed_dim}")
 
     # position of each row within its region (appearance order preserved)
     sort_idx = np.argsort(ridx_rows, kind="stable")
@@ -513,7 +521,9 @@ def assign_scan_all(alloc, obs, ridx_rows: np.ndarray, *, mem_t, work, mids,
             jnp.asarray(np.float64(slot_s)))
         alloc._dev_rings = DeviceRings(mids=lm, slots=ls, embeds=le,
                                        norms=ln)
-        out_np = np.asarray(out)      # the one device->host sync per slot
+        obs_rt.count("micro.host_sync.scan_all")
+        with obs_rt.span("micro.host_sync"):
+            out_np = np.asarray(out)  # the one device->host sync per slot
     return out_np[ridx_rows, pos].astype(np.int32)
 
 

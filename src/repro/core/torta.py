@@ -15,6 +15,7 @@ import numpy as np
 from repro.api import BatchDecision, SlotDecision
 from repro.core.macro import MacroAllocator
 from repro.core.micro import MicroAllocator
+from repro.obs import runtime as obs_rt
 from repro.sim.engine import SlotObs
 from repro.sim.workload import Task
 
@@ -91,24 +92,28 @@ class TortaScheduler:
     def _macro_step(self, obs: SlotObs, demand: np.ndarray) -> np.ndarray:
         """Shared phase-1 macro computation: predict next-slot demand,
         corrupt it if requested, log it, and solve for A_t."""
-        r = self.n_regions
-        q_norm = obs.queue_tasks / max(float(obs.queue_tasks.max()), 1.0)
-        predicted = self.macro.predict_next(demand, obs.utilization, q_norm)
-        if self.prediction_noise > 0:
-            noise = self.rng.dirichlet(np.ones(r))
-            predicted = (1 - self.prediction_noise) * predicted \
-                + self.prediction_noise * noise
-        self.prediction_log.append(np.asarray(predicted))
+        with obs_rt.span("macro.phase1"):
+            r = self.n_regions
+            q_norm = obs.queue_tasks / max(float(obs.queue_tasks.max()),
+                                           1.0)
+            predicted = self.macro.predict_next(demand, obs.utilization,
+                                                q_norm)
+            if self.prediction_noise > 0:
+                noise = self.rng.dirichlet(np.ones(r))
+                predicted = (1 - self.prediction_noise) * predicted \
+                    + self.prediction_noise * noise
+            self.prediction_log.append(np.asarray(predicted))
 
-        # supply = capacity net of existing backlog (temporal load awareness)
-        cap = np.maximum(obs.capacities - obs.queue_tasks,
-                         0.05 * np.maximum(obs.capacities, 1e-6))
-        a = self.macro.allocate(
-            demand=demand, predicted=predicted, capacity=cap,
-            power_cost=obs.power_prices, latency=obs.latency,
-            queue=obs.queue_s, utilization=obs.utilization,
-            q_max=10.0 * float(cap.sum()) * obs.slot_seconds)
-        self._predicted = predicted
+            # supply = capacity net of existing backlog (temporal load
+            # awareness)
+            cap = np.maximum(obs.capacities - obs.queue_tasks,
+                             0.05 * np.maximum(obs.capacities, 1e-6))
+            a = self.macro.allocate(
+                demand=demand, predicted=predicted, capacity=cap,
+                power_cost=obs.power_prices, latency=obs.latency,
+                queue=obs.queue_s, utilization=obs.utilization,
+                q_max=10.0 * float(cap.sum()) * obs.slot_seconds)
+            self._predicted = predicted
         return a
 
     def _row_probs(self, a: np.ndarray, origin: int,
@@ -242,7 +247,9 @@ class TortaScheduler:
             trend = float(np.clip(total / prev_tot, 1.0, 1.6))
         else:
             trend = 1.0
-        return pred_inbound * trend
+        pred_inbound = pred_inbound * trend
+        obs_rt.record_forecast(pred_inbound)
+        return pred_inbound
 
     def _phase2(self, obs, a, demand, predicted, by_region):
         # Phase 2: micro layer per region

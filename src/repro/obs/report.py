@@ -1,0 +1,109 @@
+"""RunReport — the JSON artifact one engine run emits.
+
+Bundles the run's summary metrics, counters, span table and per-slot
+series into a single serializable object so benchmarks, examples and CI
+can persist/compare runs without re-deriving anything from live engine
+state.  ``environment_info`` captures the execution substrate (jax
+version/backend/devices, CPU count) — ``benchmarks/common.provenance``
+layers git/wall-clock facts on top for the ``BENCH_*.json`` files.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import platform
+from typing import Any, Dict, List
+
+import numpy as np
+
+
+def environment_info() -> Dict[str, Any]:
+    """Substrate facts that make perf numbers comparable across
+    containers.  jax is imported lazily and failure-tolerated so the
+    helper works in numpy-only contexts."""
+    info: Dict[str, Any] = {
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "cpu_count": os.cpu_count(),
+        "numpy": np.__version__,
+    }
+    try:
+        import jax
+        info["jax"] = jax.__version__
+        info["jax_backend"] = jax.default_backend()
+        info["jax_devices"] = [str(d) for d in jax.devices()]
+    except Exception as exc:                      # pragma: no cover
+        info["jax"] = f"unavailable ({type(exc).__name__})"
+    return info
+
+
+def _jsonable(value):
+    if isinstance(value, np.ndarray):
+        return value.tolist()
+    if isinstance(value, (np.integer,)):
+        return int(value)
+    if isinstance(value, (np.floating,)):
+        return float(value)
+    if isinstance(value, dict):
+        return {k: _jsonable(v) for k, v in value.items()}
+    if isinstance(value, (list, tuple)):
+        return [_jsonable(v) for v in value]
+    return value
+
+
+@dataclasses.dataclass
+class RunReport:
+    """One run's observability artifact."""
+
+    meta: Dict[str, Any]                 # run config + environment
+    summary: Dict[str, float]            # MetricsAggregator.summary()
+    counters: Dict[str, int]             # flattened name{labels} -> value
+    spans: List[Dict]                    # Tracer.summary() rows
+    series: Dict[str, Any]               # SeriesRecorder.timeseries()
+
+    # ------------------------------------------------------------------
+
+    def counter(self, name: str) -> int:
+        """Sum over every label set of ``name`` (0 if absent)."""
+        total = 0
+        for key, value in self.counters.items():
+            if key == name or key.startswith(name + "{"):
+                total += value
+        return total
+
+    def span_names(self) -> List[str]:
+        return [row["name"] for row in self.spans]
+
+    def series_array(self, channel: str) -> np.ndarray:
+        return np.asarray(self.series[channel])
+
+    # ------------------------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "meta": _jsonable(self.meta),
+            "summary": _jsonable(self.summary),
+            "counters": _jsonable(self.counters),
+            "spans": _jsonable(self.spans),
+            "series": _jsonable(self.series),
+        }
+
+    def to_json(self, indent: int = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent, default=float)
+
+    def save(self, path) -> None:
+        with open(path, "w") as fh:
+            fh.write(self.to_json())
+
+    @classmethod
+    def from_json(cls, text: str) -> "RunReport":
+        d = json.loads(text)
+        return cls(meta=d["meta"], summary=d["summary"],
+                   counters=d["counters"], spans=d["spans"],
+                   series=d["series"])
+
+    @classmethod
+    def load(cls, path) -> "RunReport":
+        with open(path) as fh:
+            return cls.from_json(fh.read())

@@ -53,10 +53,14 @@ import numpy as np
 
 from repro.api import (BatchDecision, LegacySchedulerAdapter, Scheduler,
                        SlotDecision, ensure_batch_scheduler)
+from repro.obs import make_obs
+from repro.obs import runtime as obs_rt
 from repro.sim.cluster import (COLD_START_S, SWITCH_POWER_FRAC, Cluster)
 from repro.sim.metrics import MetricsAggregator
 from repro.sim.state import ACTIVE, OFF, WARMING, ClusterState
 from repro.sim.topology import Topology
+
+_OBS_UNSET = object()
 
 __all__ = ["Engine", "FailureEvent", "SlotObs", "SlotDecision",
            "BatchDecision", "Scheduler"]
@@ -101,7 +105,8 @@ class Engine:
                  failures: Optional[List[FailureEvent]] = None,
                  seed: int = 0,
                  batch_mode: Optional[bool] = None,
-                 step_backend: str = "numpy"):
+                 step_backend: str = "numpy",
+                 obs=None):
         TaskBatch, as_source = _workload_api()
         self._TaskBatch = TaskBatch
         self.topo = topology
@@ -137,6 +142,10 @@ class Engine:
         self._hist_n = 0
         self.pending_batch = TaskBatch.empty()   # cross-slot buffer
         self._failed: Dict[int, int] = {}   # region -> slots remaining
+        # observability: default-on cheap tier (counters + series); pass
+        # obs=False to disable, obs="trace" for opt-in span timing
+        self.obs = make_obs(obs)
+        self.run_report = None              # RunReport after each run()
 
     # ------------------------------------------------------------------
 
@@ -303,11 +312,15 @@ class Engine:
         direct = ok_region & (st.state[g0] == ACTIVE)
         if np.array_equal(direct, ok_region):
             # every resolvable target is directly active: grouped apply
+            n_rf = int(np.count_nonzero(cand & ~ok_region))
+            if n_rf:
+                obs_rt.count("engine.tasks.resolve_failed", n_rf)
             return self._apply_grouped(t, batch, region, g0, direct,
                                        alloc, assigned)
         # some targeted server went inactive (activation/failure between
         # decision and apply): replay the legacy per-task loop so the
         # least-backlogged fallback sees queues exactly as they evolve
+        obs_rt.count("engine.fallback.inactive_target_slot")
         return self._apply_sequential(t, batch, decision, alloc, assigned)
 
     def _apply_grouped(self, t: int, batch, region: np.ndarray,
@@ -330,6 +343,11 @@ class Engine:
         energy_total = 0.0
         switch_total = 0.0
         n_switches = 0
+        if pos_multi.size:
+            # rows applied through the sequential per-task walk even on
+            # the jax step backend — the fused path's residual numpy work
+            obs_rt.count("engine.fallback.same_server_conflict",
+                         pos_multi.size)
 
         if pos_single.size:
             # servers receiving exactly one task: one vectorized pass
@@ -383,6 +401,7 @@ class Engine:
         energy_total = 0.0
         switch_total = 0.0
         n_switches = 0
+        n_resolve_failed = 0
         waits: List[float] = []
         works: List[float] = []
         nets: List[float] = []
@@ -392,6 +411,7 @@ class Engine:
                 continue
             g = self._resolve_server(ridx, int(decision.server[i]))
             if g < 0:
+                n_resolve_failed += 1
                 continue
             e, s_s, sw_flag, wt, wk, nt = self._apply_one(
                 g, int(batch.model_idx[i]), float(batch.work_s[i]),
@@ -404,6 +424,8 @@ class Engine:
             nets.append(nt)
             alloc[batch.origin[i], ridx] += 1
             assigned[i] = True
+        if n_resolve_failed:
+            obs_rt.count("engine.tasks.resolve_failed", n_resolve_failed)
         self.metrics.record_completions(t, waits, works, nets)
         return alloc, energy_total, switch_total, n_switches, assigned
 
@@ -455,15 +477,42 @@ class Engine:
 
     # ------------------------------------------------------------------
 
-    def run(self, n_slots: Optional[int] = None) -> MetricsAggregator:
+    def run(self, n_slots: Optional[int] = None, *,
+            obs=_OBS_UNSET) -> MetricsAggregator:
         """The single engine loop: ``TaskBatch`` in, ``BatchDecision``
-        out, grouped whole-array apply — for every scheduler."""
+        out, grouped whole-array apply — for every scheduler.
+
+        ``obs`` overrides the engine's observability for this and later
+        runs (same spec surface as the constructor: ``False`` off,
+        ``"trace"`` adds span timing).  After the run,
+        ``self.run_report`` holds the :class:`repro.obs.RunReport`
+        (None when observability is off); the return value stays the
+        plain ``MetricsAggregator`` the existing callers consume."""
+        if obs is not _OBS_UNSET:
+            self.obs = make_obs(obs)
         t_total = n_slots or self.source.n_slots
         self.scheduler.reset()
+        if self.obs is not None:
+            self.obs.begin_run(self.state.n_regions, self.slot_s)
+        with obs_rt.activate(self.obs):
+            self._run_loop(t_total)
+        if self.obs is not None:
+            self.run_report = self.obs.report(
+                summary=self.metrics.summary(),
+                meta={"n_slots": t_total,
+                      "n_regions": self.state.n_regions,
+                      "n_servers": self.state.n_servers,
+                      "scheduler": getattr(self.scheduler, "name", "?"),
+                      "step_backend": self.step_backend,
+                      "slot_seconds": self.slot_s})
+        return self.metrics
+
+    def _run_loop(self, t_total: int) -> None:
         TaskBatch = self._TaskBatch
         st = self.state
         r = st.n_regions
         src = self.source
+        track = self.obs is not None and self.obs.series is not None
         for t in range(t_total):
             self._step_failures(t)
             self._progress_warming()
@@ -472,37 +521,72 @@ class Engine:
                    else TaskBatch.empty())
             self._record_arrivals(
                 new.origin_counts(r).astype(np.float64))
+            if len(new):
+                obs_rt.count("engine.tasks.arrived", len(new))
             # buffered tasks get first chance
             batch = TaskBatch.concat(self.pending_batch, new)
             self.pending_batch = TaskBatch.empty()
 
             obs = self._obs(t)
-            decision = self.scheduler.schedule_batch(obs, batch)
+            n_resp0 = len(self.metrics.response_times)
+            with obs_rt.span("schedule.batch"):
+                decision = self.scheduler.schedule_batch(obs, batch)
             decision.validate(len(batch), st)
             overhead_s = 0.0
             targets = decision.activation_targets(r)
             if targets:
                 overhead_s += self._apply_activation(targets)
 
-            (alloc, switch_energy_j, switch_s, n_switches,
-             assigned) = self._apply_decision(t, batch, decision)
+            with obs_rt.span("engine.apply"):
+                (alloc, switch_energy_j, switch_s, n_switches,
+                 assigned) = self._apply_decision(t, batch, decision)
             overhead_s += switch_s
 
             # every unassigned row ages out the same way, whether the
             # scheduler buffered it or its server failed resolution —
             # resolve-failed tasks used to be exempt, recirculating
             # forever (and never counting as drops) through long outages
+            n_drop = 0
             left = np.flatnonzero(~assigned)
             if left.size:
                 too_old = (t - batch.arrival_slot[left]) >= self.drop_after
                 n_drop = int(np.count_nonzero(too_old))
                 if n_drop:
                     self.metrics.record_drops(n_drop, t)
+                    obs_rt.count("engine.tasks.dropped", n_drop)
                 keep = left[~too_old]
+                if keep.size:
+                    obs_rt.count("engine.tasks.buffered", keep.size)
                 # reference-faithful buffer order: group rows by origin
                 keep = keep[np.argsort(batch.origin[keep], kind="stable")]
                 self.pending_batch = batch.select(keep)
+            n_assigned = int(np.count_nonzero(assigned))
+            if n_assigned:
+                obs_rt.count("engine.tasks.assigned", n_assigned)
 
-            self._finish_slot(t, obs, alloc, switch_energy_j, n_switches,
-                              overhead_s)
-        return self.metrics
+            with obs_rt.span("engine.slot_close"):
+                self._finish_slot(t, obs, alloc, switch_energy_j,
+                                  n_switches, overhead_s)
+            if track:
+                self._observe_slot(t, obs, n_resp0, n_drop)
+
+    def _observe_slot(self, t: int, obs: SlotObs, n_resp0: int,
+                      n_drop: int) -> None:
+        """Feed the per-slot series recorder.  Observation-only: reads
+        values the slot already produced (responses appended this slot,
+        the lb record, arrivals row, fleet state) — never engine RNG or
+        state, so summary metrics stay bitwise-identical to an obs-off
+        run."""
+        st = self.state
+        m = self.metrics
+        responses = np.asarray(m.response_times[n_resp0:], np.float64)
+        act = (st.state == ACTIVE).astype(np.float64)
+        cum = np.concatenate(([0.0], np.cumsum(act)))
+        act_counts = cum[st.region_ptr[1:]] - cum[st.region_ptr[:-1]]
+        saturation = act_counts / np.maximum(st.region_sizes(), 1)
+        self.obs.end_slot(
+            t, responses=responses,
+            queue_tasks=float(obs.queue_tasks.sum()),
+            arrivals=self._hist[self._hist_n - 1],
+            drops=n_drop, saturation=saturation,
+            load_balance=m.lb_by_slot[-1] if m.lb_by_slot else 1.0)

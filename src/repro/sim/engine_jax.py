@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
+from repro.obs import runtime as obs_rt
 from repro.sim.cluster import SWITCH_POWER_FRAC
 from repro.sim.state import (ACTIVE, NO_MODEL, WARM_SLOTS, WARMING,
                              ClusterState, _WARM_HIT_S)
@@ -205,6 +206,9 @@ class JaxStepper:
         st = self.state
         if not (st.state == WARMING).any():
             return
+        obs_rt.count_new_shape("engine.retrace.warm_step",
+                               str(st.n_servers))
+        obs_rt.count("engine.host_sync.warm_step")
         with enable_x64(True):
             step = warm_step(self._make_step(),
                              jnp.asarray(np.float64(slot_s)))
@@ -217,7 +221,11 @@ class JaxStepper:
         the numpy grouped apply."""
         st = self.state
         k = gs.size
-        pad = row_bucket(k) - k
+        bucket = row_bucket(k)
+        obs_rt.count_new_shape("engine.retrace.apply_single",
+                               f"{bucket}x{st.n_servers}")
+        obs_rt.count("engine.host_sync.apply_single")
+        pad = bucket - k
         s_total = st.n_servers
         gs_p = np.pad(gs.astype(np.int64), (0, pad),
                       constant_values=s_total)      # OOB -> dropped
@@ -238,6 +246,9 @@ class JaxStepper:
         """Drain/bill the slot; returns the per-server power draw (J)
         and active mask for the host-side regional reduction."""
         st = self.state
+        obs_rt.count_new_shape("engine.retrace.close_step",
+                               str(st.n_servers))
+        obs_rt.count("engine.host_sync.close_step")
         with enable_x64(True):
             step, power_j, act = close_step(
                 self._make_step(), jnp.asarray(np.float64(slot_s)))
