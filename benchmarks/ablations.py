@@ -9,7 +9,6 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-import numpy as np
 
 from benchmarks.common import fmt_table, save_results
 

@@ -336,7 +336,7 @@ FUSED_CONFIGS = [
 ]
 
 
-def bench_fused(obs: bool = False) -> None:
+def bench_fused(obs: bool = False, retrace_budget: bool = False) -> None:
     """The fused device-resident slot step head to head with the two
     prior generations: numpy micro backend, per-region jitted scans
     (``micro_backend="jax"``), and the fused multi-region scan + jitted
@@ -393,6 +393,35 @@ def bench_fused(obs: bool = False) -> None:
                "fused_speedup_vs_numpy": dt_np / dt_fu}
         if eng_fu.run_report is not None:
             row["fused_counters"] = eng_fu.run_report.counters
+        if retrace_budget and eng_fu.run_report is not None:
+            # hard-fail the run if the fused config compiled more bucket
+            # shapes than analysis/retrace_budget.toml allows
+            from repro.analysis import retrace
+            from repro.analysis.basefile import load_budget
+            budget = load_budget(pathlib.Path(__file__).resolve().parent
+                                 .parent / "analysis"
+                                 / "retrace_budget.toml")
+            rep = retrace.enforce(eng_fu.run_report.counters, budget)
+            row["retrace_shapes"] = rep.observed
+            print(f"  retrace budget OK: {rep.observed}", flush=True)
+
+        from repro.analysis import sanitize as sanitize_rt
+        if sanitize_rt.enabled():
+            # REPRO_SANITIZE=1: prove the checkify-instrumented kernels
+            # change no metric bit vs the unguarded fused path
+            with sanitize_rt.force(False):
+                m_plain = mk_fused().run(s_fu).summary()
+            m_san = mk_fused().run(s_fu).summary()
+            diff = [k for k in m_plain
+                    if not (m_plain[k] == m_san[k]
+                            or (m_plain[k] != m_plain[k]
+                                and m_san[k] != m_san[k]))]
+            if diff:
+                raise SystemExit(
+                    f"sanitized fused run diverged on {diff}")
+            row["sanitized_parity"] = "bitwise"
+            print("  sanitized parity OK (REPRO_SANITIZE=1, "
+                  "checkify user+float+index)", flush=True)
         print(f"  numpy {dt_np:7.2f}  per-region-jax {dt_jx:7.2f}  "
               f"fused {dt_fu:7.2f} s/slot  "
               f"-> {row['fused_speedup_vs_jax']:.1f}x vs jax, "
@@ -466,6 +495,10 @@ def main() -> None:
     ap.add_argument("--obs", action="store_true",
                     help="add a traced fused run per config: span summary "
                          "table + RunReport JSON under benchmarks/results/")
+    ap.add_argument("--retrace-budget", action="store_true",
+                    help="enforce analysis/retrace_budget.toml against the "
+                         "fused run's retrace counters (hard failure on "
+                         "overrun or unbudgeted counter)")
     ap.add_argument("--toy", action="store_true",
                     help="shrink every config to a seconds-scale smoke "
                          "and skip BENCH_*.json writes (CI)")
@@ -487,7 +520,7 @@ def main() -> None:
         bench_micro()
         return
     if args.fused_only:
-        bench_fused(obs=args.obs)
+        bench_fused(obs=args.obs, retrace_budget=args.retrace_budget)
         return
 
     if not args.workload_only:

@@ -5,7 +5,6 @@ from __future__ import annotations
 import time
 from typing import Dict, List
 
-import numpy as np
 
 from benchmarks.common import fmt_table
 

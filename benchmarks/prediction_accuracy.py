@@ -5,7 +5,7 @@ measured with Eq 12 against the actual next-slot arrival distributions.
 Baselines have no predictor -> flat lines."""
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict
 
 import numpy as np
 

@@ -2,10 +2,9 @@
 mesh) roofline terms, bottleneck, and useful-FLOP fraction."""
 from __future__ import annotations
 
-import glob
 import json
 import pathlib
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from benchmarks.common import RESULTS_DIR, fmt_table
 

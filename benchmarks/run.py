@@ -10,7 +10,6 @@ by the human-readable figure tables.
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 

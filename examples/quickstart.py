@@ -2,6 +2,11 @@
 topology with TORTA and compare against round-robin.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Before sending a change, run the hot-path hazard analyzer
+(``PYTHONPATH=src python -m repro.analysis --check``); set
+``REPRO_SANITIZE=1`` (or ``Engine(sanitize=True)``) to run this same
+demo with checkify assertions on the fused kernels.
 """
 from repro.baselines import RoundRobinScheduler
 from repro.core.torta import TortaScheduler

@@ -1,0 +1,20 @@
+"""Static hot-path hazard analysis + runtime sanitizer wiring.
+
+``python -m repro.analysis`` lints the registered jit-extent modules for
+host-sync / dtype / retrace hazards, checks the structural invariants
+(kernel oracles, pytree-view field coverage), and reconciles the result
+against the checked-in baseline (``analysis/baseline.toml``).  See
+``ARCHITECTURE.md`` § "Static analysis & sanitizers".
+
+Submodules:
+
+* ``hazards``   — the AST linter over the jit-extent registry
+* ``structure`` — kernel-oracle and pytree-view invariant checks
+* ``retrace``   — retrace-budget enforcement from obs counters
+* ``sanitize``  — the ``REPRO_SANITIZE`` switch + checkify wrapper cache
+* ``registry``  — WHICH modules/views/helpers the rules apply to
+* ``basefile``  — baseline / budget file reader-writer (TOML subset)
+"""
+from repro.analysis.findings import Finding, Suppression, partition
+
+__all__ = ["Finding", "Suppression", "partition"]

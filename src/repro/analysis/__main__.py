@@ -1,0 +1,95 @@
+"""CLI: ``python -m repro.analysis [--check] [--write-baseline]``.
+
+Default mode prints a report (new, suppressed and stale-suppression
+counts plus every unsuppressed finding) and always exits 0.  ``--check``
+is the CI mode: exit 1 if any unsuppressed finding OR any stale
+suppression exists — the baseline must describe reality exactly.
+``--write-baseline`` regenerates ``analysis/baseline.toml`` from the
+current findings, preserving reasons for entries that already exist and
+stamping ``TODO: justify`` on new ones (which ``--check`` then rejects
+until a human writes the reason).
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+from typing import List
+
+from repro.analysis import basefile, hazards, structure
+from repro.analysis.findings import Finding, Suppression, partition
+
+_TODO_REASON = "TODO: justify this suppression"
+
+
+def collect(root: pathlib.Path) -> List[Finding]:
+    findings = hazards.lint_tree(root)
+    findings += structure.check_tree(root)
+    # Parse the budget file so a malformed one fails analysis even when
+    # no benchmark is running.
+    basefile.load_budget(root / "analysis" / "retrace_budget.toml")
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="hot-path hazard analyzer (see ARCHITECTURE.md)")
+    ap.add_argument("--root", type=pathlib.Path,
+                    default=pathlib.Path.cwd(),
+                    help="repo root (default: cwd)")
+    ap.add_argument("--check", action="store_true",
+                    help="CI mode: exit 1 on unsuppressed findings, stale "
+                         "suppressions, or TODO reasons")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite analysis/baseline.toml from current "
+                         "findings (preserving existing reasons)")
+    args = ap.parse_args(argv)
+
+    root = args.root.resolve()
+    baseline_path = root / "analysis" / "baseline.toml"
+    try:
+        suppressions = basefile.load_suppressions(baseline_path)
+        findings = collect(root)
+    except basefile.BaselineError as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 1
+    new, suppressed, stale = partition(findings, suppressions)
+
+    if args.write_baseline:
+        by_fp = {s.fingerprint: s for s in suppressions}
+        keep = [s for s in suppressions
+                if s.fingerprint in {f.fingerprint for f in findings}]
+        for f in new:
+            if f.fingerprint not in by_fp:
+                keep.append(Suppression(rule=f.rule, path=f.path,
+                                        symbol=f.symbol,
+                                        reason=_TODO_REASON))
+                by_fp[f.fingerprint] = keep[-1]
+        keep.sort(key=lambda s: s.fingerprint)
+        baseline_path.parent.mkdir(parents=True, exist_ok=True)
+        baseline_path.write_text(basefile.dump_suppressions(keep))
+        print(f"wrote {len(keep)} suppression(s) to "
+              f"{baseline_path.relative_to(root)}")
+        return 0
+
+    for f in new:
+        print(f.format())
+    for s in stale:
+        print(f"{s.path}: [stale-suppression] {s.symbol}: baseline entry "
+              f"for rule {s.rule!r} matches no current finding — remove it")
+    todo = [s for s in suppressions if s.reason == _TODO_REASON]
+    for s in todo:
+        print(f"{s.path}: [todo-reason] {s.symbol}: suppression for "
+              f"{s.rule!r} still carries the placeholder reason")
+
+    print(f"analysis: {len(findings)} finding(s) — {len(new)} new, "
+          f"{len(suppressed)} suppressed, {len(stale)} stale "
+          f"suppression(s)")
+    if args.check and (new or stale or todo):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

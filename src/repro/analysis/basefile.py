@@ -1,0 +1,147 @@
+"""Reading/writing the checked-in analysis data files.
+
+The container pins Python 3.10 (no ``tomllib``) and ships no third-party
+TOML package, so this module implements the *subset* of TOML the two
+analysis files actually use — ``[section]`` headers, ``[[array-of-table]]``
+headers, ``key = "string"`` / ``key = integer`` pairs — with a writer that
+emits exactly what the reader accepts.  It is NOT a general TOML parser
+and refuses input outside the subset rather than guessing.
+
+Files:
+
+* ``analysis/baseline.toml`` — ``[[suppress]]`` entries (rule/path/
+  symbol/reason), the green-by-baseline ledger for pre-existing hazards;
+* ``analysis/retrace_budget.toml`` — a ``[budget]`` table mapping each
+  retrace counter path to its per-run compiled-shape budget.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+from typing import Dict, List, Tuple, Union
+
+from repro.analysis.findings import Suppression
+
+_HEADER_RE = re.compile(r"^\[(\[)?([A-Za-z0-9_.\-]+)\](\])?$")
+_KV_RE = re.compile(r"^([A-Za-z0-9_.\-]+|\"[^\"]+\")\s*=\s*(.+)$")
+
+Scalar = Union[str, int]
+
+
+class BaselineError(ValueError):
+    """Malformed analysis data file (or a suppression without a reason)."""
+
+
+def _parse_value(raw: str, path: str, n: int) -> Scalar:
+    raw = raw.strip()
+    if raw.startswith('"') and raw.endswith('"') and len(raw) >= 2:
+        return raw[1:-1]
+    if re.fullmatch(r"-?\d+", raw):
+        return int(raw)
+    raise BaselineError(f"{path}:{n}: unsupported TOML value {raw!r} "
+                        "(subset parser: quoted strings and integers only)")
+
+
+def parse(text: str, path: str = "<memory>"
+          ) -> List[Tuple[str, Dict[str, Scalar]]]:
+    """Parse into ``(table_name, mapping)`` entries, in file order.
+    ``[[name]]`` opens a fresh entry per occurrence; ``[name]`` one per
+    distinct header."""
+    entries: List[Tuple[str, Dict[str, Scalar]]] = []
+    current: Dict[str, Scalar] = {}
+    for n, line in enumerate(text.splitlines(), 1):
+        stripped = line.split("#", 1)[0].strip() if not (
+            '"' in line) else line.strip()
+        if stripped.startswith("#") or not stripped:
+            continue
+        m = _HEADER_RE.match(stripped)
+        if m:
+            if bool(m.group(1)) != bool(m.group(3)):
+                raise BaselineError(f"{path}:{n}: unbalanced table header")
+            current = {}
+            entries.append((m.group(2), current))
+            continue
+        m = _KV_RE.match(stripped)
+        if m:
+            if not entries:
+                raise BaselineError(f"{path}:{n}: key outside any table")
+            key = m.group(1).strip('"')
+            current[key] = _parse_value(m.group(2), path, n)
+            continue
+        raise BaselineError(f"{path}:{n}: unparseable line {stripped!r}")
+    return entries
+
+
+# ------------------------------------------------------------- baseline
+
+
+def load_suppressions(path: pathlib.Path) -> List[Suppression]:
+    """Load ``[[suppress]]`` entries; every entry MUST carry a non-empty
+    ``reason`` (an unjustified suppression is a finding in itself)."""
+    if not path.exists():
+        return []
+    out: List[Suppression] = []
+    for name, entry in parse(path.read_text(), str(path)):
+        if name != "suppress":
+            raise BaselineError(f"{path}: unexpected table [[{name}]] "
+                                "(baseline holds only [[suppress]])")
+        missing = [k for k in ("rule", "path", "symbol", "reason")
+                   if not str(entry.get(k, "")).strip()]
+        if missing:
+            raise BaselineError(
+                f"{path}: suppression {entry!r} missing {missing} — every "
+                "suppression must name rule/path/symbol AND carry a reason")
+        out.append(Suppression(rule=str(entry["rule"]),
+                               path=str(entry["path"]),
+                               symbol=str(entry["symbol"]),
+                               reason=str(entry["reason"])))
+    return out
+
+
+def dump_suppressions(sups: List[Suppression]) -> str:
+    lines = ["# Analysis baseline: suppressed pre-existing findings.",
+             "# Every entry must carry a reason; stale entries fail",
+             "# `python -m repro.analysis --check`.  Regenerate with",
+             "# `python -m repro.analysis --write-baseline` (then edit",
+             "# the placeholder reasons)."]
+    for s in sups:
+        lines += ["", "[[suppress]]",
+                  f'rule = "{s.rule}"',
+                  f'path = "{s.path}"',
+                  f'symbol = "{s.symbol}"',
+                  f'reason = "{s.reason}"']
+    return "\n".join(lines) + "\n"
+
+
+# --------------------------------------------------------------- budget
+
+
+def load_budget(path: pathlib.Path) -> Dict[str, int]:
+    """Load the ``[budget]`` table: retrace counter name -> max distinct
+    compiled shapes per run."""
+    if not path.exists():
+        return {}
+    out: Dict[str, int] = {}
+    for name, entry in parse(path.read_text(), str(path)):
+        if name != "budget":
+            raise BaselineError(f"{path}: unexpected table [{name}] "
+                                "(budget file holds only [budget])")
+        for key, value in entry.items():
+            if not isinstance(value, int) or value < 0:
+                raise BaselineError(
+                    f"{path}: budget for {key!r} must be a non-negative "
+                    f"integer, got {value!r}")
+            out[key] = value
+    return out
+
+
+def dump_budget(budget: Dict[str, int]) -> str:
+    lines = ["# Per-path retrace budgets: max distinct compiled bucket",
+             "# shapes one benchmark run may sight per jitted entry point",
+             "# (counted by the repro/obs retrace counters).  Exceeding a",
+             "# budget — or sighting a path with no budget — is a hard",
+             "# failure under `--retrace-budget` / the analysis CLI.",
+             "", "[budget]"]
+    for key in sorted(budget):
+        lines.append(f'"{key}" = {budget[key]}')
+    return "\n".join(lines) + "\n"

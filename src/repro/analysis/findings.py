@@ -1,0 +1,59 @@
+"""The analyzer's finding model and suppression matching.
+
+A :class:`Finding` is one violation of a hot-path invariant: a hazard the
+AST linter saw inside a traced function, a structural drift the invariant
+checker caught, or a retrace-budget overrun.  Findings carry a stable
+*fingerprint* — ``(rule, path, symbol)`` — deliberately excluding the
+line number, so suppressions in ``analysis/baseline.toml`` survive
+unrelated edits to the file.  Two findings of the same rule in the same
+function collapse onto one fingerprint: suppressing a hazard class for a
+symbol is an explicit, reviewable decision, not a per-line whack-a-mole.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str          # hazard/invariant rule id, e.g. "host-np-call"
+    path: str          # repo-relative posix path of the offending file
+    line: int          # 1-based line (display only; not in fingerprint)
+    symbol: str        # enclosing function/class ("<module>" at top level)
+    message: str       # human-readable description of the violation
+
+    @property
+    def fingerprint(self) -> Tuple[str, str, str]:
+        return (self.rule, self.path, self.symbol)
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}: [{self.rule}] {self.symbol}: "
+                f"{self.message}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    """One baseline entry.  ``reason`` is mandatory — a suppression
+    without a written justification is itself an error."""
+    rule: str
+    path: str
+    symbol: str
+    reason: str
+
+    @property
+    def fingerprint(self) -> Tuple[str, str, str]:
+        return (self.rule, self.path, self.symbol)
+
+
+def partition(findings: List[Finding], suppressions: List[Suppression]
+              ) -> Tuple[List[Finding], List[Finding], List[Suppression]]:
+    """Split findings into (new, suppressed) and report the stale
+    suppressions whose hazard no longer exists (baseline rot is surfaced,
+    not silently carried)."""
+    allowed = {s.fingerprint for s in suppressions}
+    new = [f for f in findings if f.fingerprint not in allowed]
+    suppressed = [f for f in findings if f.fingerprint in allowed]
+    live = {f.fingerprint for f in findings}
+    stale = [s for s in suppressions if s.fingerprint not in live]
+    return new, suppressed, stale

@@ -1,0 +1,80 @@
+"""Retrace-budget enforcement: obs counters -> hard failures.
+
+The jitted hot paths count one ``*.retrace.*`` tick per *first sighting*
+of an operand-shape bucket (see ``repro/obs``): the number of distinct
+label cells under a retrace counter name is exactly the number of XLA
+compilations that entry point caused this run.  The pad-and-mask bucket
+design makes that number small and *static* per workload size — so we pin
+it.  ``analysis/retrace_budget.toml`` records the allowed shape count per
+counter; a run that sights more shapes (a bucketing regression, a stray
+Python-scalar operand, a dynamic pad) fails instead of silently paying a
+recompile per step.
+
+Budgets are checked in both directions: exceeding a budget fails, and
+sighting a retrace counter that has *no* budget entry fails too — new
+jitted entry points must declare their compile-shape contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from repro.analysis import registry
+from repro.analysis.findings import Finding
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetReport:
+    observed: Dict[str, int]      # counter name -> distinct shapes sighted
+    violations: List[Finding]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+
+def observed_shapes(counters) -> Dict[str, int]:
+    """Distinct label cells per retrace counter name, from a
+    ``repro.obs.counters.Counters`` (or any mapping produced by its
+    ``as_dict``).  Each cell is one compiled shape."""
+    cells = counters.as_dict() if hasattr(counters, "as_dict") else counters
+    out: Dict[str, int] = {}
+    for key in cells:
+        # Counters cells flatten to "name{k=v}"; tuples are (name, labels)
+        name = key[0] if isinstance(key, tuple) else str(key).split("{")[0]
+        if name.startswith(registry.RETRACE_COUNTER_PREFIXES):
+            out[name] = out.get(name, 0) + 1
+    return out
+
+
+def check_budget(observed: Dict[str, int], budget: Dict[str, int],
+                 source: str = "analysis/retrace_budget.toml"
+                 ) -> BudgetReport:
+    violations: List[Finding] = []
+    for name in sorted(observed):
+        seen = observed[name]
+        if name not in budget:
+            violations.append(Finding(
+                rule="retrace-unbudgeted-counter", path=source, line=1,
+                symbol=name,
+                message=f"retrace counter {name!r} sighted {seen} compiled "
+                        "shape(s) but has no budget entry — declare its "
+                        "compile-shape contract in the budget file"))
+        elif seen > budget[name]:
+            violations.append(Finding(
+                rule="retrace-budget-exceeded", path=source, line=1,
+                symbol=name,
+                message=f"{name}: {seen} distinct compiled shapes observed, "
+                        f"budget allows {budget[name]} — a bucketing "
+                        "regression is forcing extra XLA compiles"))
+    return BudgetReport(observed=observed, violations=violations)
+
+
+def enforce(counters, budget: Dict[str, int]) -> BudgetReport:
+    """Check and raise on violation (for benchmark --retrace-budget)."""
+    report = check_budget(observed_shapes(counters), budget)
+    if not report.ok:
+        raise RuntimeError(
+            "retrace budget violated:\n  "
+            + "\n  ".join(f.format() for f in report.violations))
+    return report

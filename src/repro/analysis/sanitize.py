@@ -1,0 +1,104 @@
+"""Opt-in runtime sanitizer switch for the jitted hot paths.
+
+The fused micro scan and the engine step kernels ship two compiled
+variants: the production path (no value checks — bitwise identical to the
+historical behaviour) and a ``checkify``-instrumented path that validates
+ring-buffer indices, server ids, queue depths and score finiteness while
+computing the *same* values.  This module is the single switch both read:
+
+* environment: ``REPRO_SANITIZE=1`` (any of 1/true/yes/on), or
+* code: ``with sanitize.force(): ...`` / ``Engine(sanitize=True)``.
+
+The sanitized path funnels every checkified callable through
+:func:`checkified`, which caches the wrapped+jitted function so the
+sanitizer costs one extra compile per entry point, not one per call, and
+calls ``err.throw()`` on the host so a tripped check surfaces as a
+``JaxRuntimeError`` at the offending step instead of silent garbage.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Any, Callable, Dict, Tuple
+
+_FORCED: list = []          # explicit overrides, innermost last
+_TRUTHY = ("1", "true", "yes", "on")
+
+
+def enabled() -> bool:
+    """Is the sanitizer active right now?  Innermost :func:`force` wins;
+    otherwise the ``REPRO_SANITIZE`` environment variable decides."""
+    if _FORCED:
+        return _FORCED[-1]
+    return os.environ.get("REPRO_SANITIZE", "").strip().lower() in _TRUTHY
+
+
+@contextlib.contextmanager
+def force(flag: bool = True):
+    """Override the environment switch for a dynamic extent (used by
+    ``Engine(sanitize=True)`` and the fault-injection tests)."""
+    _FORCED.append(bool(flag))
+    try:
+        yield
+    finally:
+        _FORCED.pop()
+
+
+# ------------------------------------------------------ checkify cache
+
+_CACHE: Dict[Tuple[int, str], Callable] = {}
+
+
+def checkified(fn: Callable, errors: str = "user") -> Callable:
+    """Wrap ``fn`` with ``jax.experimental.checkify`` under the requested
+    error set and cache the result.  ``errors`` is a ``|``-joined subset
+    of ``{"index", "float", "user", "nan", "div"}``; the returned callable
+    raises on the host (``err.throw()``) and returns ``fn``'s outputs.
+
+    The wrapped function is jitted as a unit so the checks live inside
+    the compiled computation (checkify functionalizes them into the
+    jaxpr) — the only host sync added is the error predicate itself.
+    """
+    key = (id(fn), errors)
+    hit = _CACHE.get(key)
+    if hit is not None:
+        return hit
+
+    import jax
+    from jax.experimental import checkify
+
+    sets = {
+        "index": checkify.index_checks,
+        "float": checkify.float_checks,
+        "user": checkify.user_checks,
+        "nan": checkify.nan_checks,
+        "div": checkify.div_checks,
+    }
+    spec = frozenset()
+    for part in errors.split("|"):
+        part = part.strip()
+        if part not in sets:
+            raise ValueError(f"unknown checkify error set {part!r} "
+                             f"(choose from {sorted(sets)})")
+        spec = spec | sets[part]
+
+    checked = jax.jit(checkify.checkify(fn, errors=spec))
+
+    def run(*args: Any, **kwargs: Any):
+        err, out = checked(*args, **kwargs)
+        err.throw()
+        return out
+
+    run.__name__ = f"checkified_{getattr(fn, '__name__', 'fn')}"
+    _CACHE[key] = run
+    return run
+
+
+def check(pred, msg: str, **fmt) -> None:
+    """``checkify.check`` passthrough for traced code: a no-op assertion
+    on the production path is impossible (checkify.check is functional-
+    ized away unless user_checks is active), so call sites gate on a
+    ``checks`` static argument instead and only reach this under the
+    sanitized variant."""
+    from jax.experimental import checkify
+    checkify.check(pred, msg, **fmt)

@@ -1,0 +1,164 @@
+"""Structural invariant checker: kernel oracles + pytree-view coverage.
+
+Two classes of invariant that no unit test pins by construction:
+
+* **Kernel oracle discipline** — every ``kernels/<name>/`` package must
+  ship a ``ref.py`` reference implementation AND at least one test module
+  that references the kernel by name, so a Pallas kernel can never land
+  (or drift) without a checked numerical oracle.
+
+* **Pytree-view field coverage** — ``EngineStep`` mirrors
+  ``ClusterState``'s dynamic columns onto the device and ``DeviceRings``
+  mirrors ``LocalityState``; a field added to the source dataclass but
+  not to the view (or the registry's ``host_only`` table) silently never
+  reaches the jitted step.  The registry (``registry.PYTREE_VIEWS``)
+  declares the intended mapping; this checker diffs it against the live
+  dataclasses, in both directions, and additionally verifies that every
+  field of a ``jax.tree_util.register_dataclass`` view is named in its
+  ``data_fields``/``meta_fields`` registration (AST-level, so a field
+  annotated but not registered is caught even though jax would accept
+  the instance).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import importlib
+import pathlib
+from typing import List
+
+from repro.analysis import registry
+from repro.analysis.findings import Finding
+
+
+def _resolve(spec: str):
+    mod_name, _, cls_name = spec.partition(":")
+    return getattr(importlib.import_module(mod_name), cls_name)
+
+
+def _field_names(cls) -> List[str]:
+    return [f.name for f in dataclasses.fields(cls)]
+
+
+# ----------------------------------------------------------- kernels
+
+
+def check_kernels(root: pathlib.Path) -> List[Finding]:
+    out: List[Finding] = []
+    kernels_root = root / registry.KERNELS_ROOT
+    tests_root = root / registry.TESTS_ROOT
+    test_text = "\n".join(p.read_text()
+                          for p in sorted(tests_root.glob("test_*.py")))
+    for pkg in sorted(kernels_root.iterdir()):
+        if not pkg.is_dir() or not (pkg / "kernel.py").exists():
+            continue
+        rel = pkg.relative_to(root).as_posix()
+        if not (pkg / "ref.py").exists():
+            out.append(Finding(
+                rule="kernel-missing-ref", path=rel, line=1,
+                symbol=pkg.name,
+                message="kernel package ships no ref.py oracle — every "
+                        "Pallas kernel needs a reference implementation"))
+        if pkg.name not in test_text:
+            out.append(Finding(
+                rule="kernel-missing-oracle-test", path=rel, line=1,
+                symbol=pkg.name,
+                message="no test module references this kernel package — "
+                        "the ref.py oracle is never exercised"))
+    return out
+
+
+# ------------------------------------------------------- pytree views
+
+
+def check_pytree_views() -> List[Finding]:
+    out: List[Finding] = []
+    for view in registry.PYTREE_VIEWS:
+        view_cls = _resolve(view.view)
+        src_cls = _resolve(view.source)
+        view_fields = set(_field_names(view_cls))
+        src_fields = set(_field_names(src_cls))
+        rel = view.view.split(":")[0].replace(".", "/")
+        rel = f"src/{rel}.py"
+        sym = view.view.split(":")[1]
+
+        covered = (view_fields | set(view.derived.values())
+                   | set(view.host_only))
+        for name in sorted(src_fields - covered):
+            out.append(Finding(
+                rule="pytree-view-drift", path=rel, line=1, symbol=sym,
+                message=f"source field {view.source.split(':')[1]}."
+                        f"{name} is neither mirrored by {sym} nor "
+                        "declared host_only in the registry — it will "
+                        "silently never reach the device"))
+        extra = view_fields - src_fields - set(view.derived)
+        for name in sorted(extra):
+            out.append(Finding(
+                rule="pytree-view-unknown-field", path=rel, line=1,
+                symbol=sym,
+                message=f"view field {sym}.{name} matches no source "
+                        "field and no registry `derived` entry — stale "
+                        "mirror or missing registry update"))
+        for vf, sf in sorted(view.derived.items()):
+            if vf not in view_fields or sf not in src_fields:
+                out.append(Finding(
+                    rule="pytree-view-drift", path=rel, line=1,
+                    symbol=sym,
+                    message=f"registry derived mapping {vf} <- {sf} "
+                            "names a nonexistent field"))
+        for sf in sorted(view.host_only):
+            if sf not in src_fields:
+                out.append(Finding(
+                    rule="pytree-view-stale-host-only", path=rel, line=1,
+                    symbol=sym,
+                    message=f"registry host_only entry {sf!r} no longer "
+                            f"exists on {view.source.split(':')[1]}"))
+    return out
+
+
+def check_registered_dataclasses(root: pathlib.Path) -> List[Finding]:
+    """Every ``register_dataclass``-decorated class must name ALL of its
+    annotated fields in data_fields/meta_fields (AST check)."""
+    out: List[Finding] = []
+    for path in sorted((root / "src").rglob("*.py")):
+        text = path.read_text()
+        if "register_dataclass" not in text:
+            continue
+        rel = path.relative_to(root).as_posix()
+        tree = ast.parse(text, filename=rel)
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            registered: List[str] = []
+            found = False
+            for dec in node.decorator_list:
+                for sub in ast.walk(dec):
+                    if isinstance(sub, ast.Attribute) and \
+                            sub.attr == "register_dataclass":
+                        found = True
+                if not found:
+                    continue
+                for sub in ast.walk(dec):
+                    if isinstance(sub, ast.Constant) and \
+                            isinstance(sub.value, str):
+                        registered.append(sub.value)
+            if not found:
+                continue
+            annotated = [item.target.id for item in node.body
+                         if isinstance(item, ast.AnnAssign)
+                         and isinstance(item.target, ast.Name)]
+            missing = [n for n in annotated if n not in registered]
+            if missing:
+                out.append(Finding(
+                    rule="pytree-unregistered-field", path=rel,
+                    line=node.lineno, symbol=node.name,
+                    message=f"fields {missing} are annotated on "
+                            f"{node.name} but missing from its "
+                            "register_dataclass data/meta fields — they "
+                            "would be invisible to jit/tree operations"))
+    return out
+
+
+def check_tree(root: pathlib.Path) -> List[Finding]:
+    return (check_kernels(root) + check_pytree_views()
+            + check_registered_dataclasses(root))

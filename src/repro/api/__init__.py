@@ -19,11 +19,11 @@ The engine (``sim/engine.py``) accepts only this contract; it auto-wraps
 legacy schedulers through :func:`ensure_batch_scheduler` and raises a
 clear error naming the adapter when a scheduler implements neither shape.
 """
+from repro.api.adapter import (LegacyOnlyView, LegacySchedulerAdapter,
+                               ensure_batch_scheduler)
 from repro.api.contract import (BatchDecision, Scheduler, SlotDecision,
                                 batch_to_slot_decision, schedule_via_batch,
                                 slot_to_batch_decision)
-from repro.api.adapter import (LegacyOnlyView, LegacySchedulerAdapter,
-                               ensure_batch_scheduler)
 
 __all__ = [
     "BatchDecision", "Scheduler", "SlotDecision",

@@ -1,5 +1,5 @@
-from repro.baselines.rr import RoundRobinScheduler
-from repro.baselines.skylb import SkyLBScheduler
-from repro.baselines.sdib import SDIBScheduler
-from repro.baselines.reactive_ot import ReactiveOTScheduler
 from repro.baselines.milp import MilpScheduler
+from repro.baselines.reactive_ot import ReactiveOTScheduler
+from repro.baselines.rr import RoundRobinScheduler
+from repro.baselines.sdib import SDIBScheduler
+from repro.baselines.skylb import SkyLBScheduler

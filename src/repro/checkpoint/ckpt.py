@@ -35,7 +35,8 @@ def _encode_leaf(x):
 
 def _decode_leaf(x):
     if isinstance(x, dict) and (b"__arr__" in x or "__arr__" in x):
-        g = lambda k: x.get(k.encode(), x.get(k))
+        def g(k):
+            return x.get(k.encode(), x.get(k))
         dt = g("dtype")
         if isinstance(dt, bytes):
             dt = dt.decode()
@@ -52,7 +53,7 @@ def save_checkpoint(path: str, step: int, tree: Tree) -> str:
     payload = {
         b"step": step,
         b"treedef": str(treedef),
-        b"leaves": [_encode_leaf(l) for l in leaves],
+        b"leaves": [_encode_leaf(leaf) for leaf in leaves],
     }
     fn = d / f"ckpt_{step:08d}.msgpack"
     tmp = fn.with_suffix(".tmp")
@@ -81,7 +82,7 @@ def load_checkpoint(path: str, template: Tree, step: Optional[int] = None
     fn = pathlib.Path(path) / f"ckpt_{step:08d}.msgpack"
     with open(fn, "rb") as f:
         payload = msgpack.unpackb(f.read(), raw=True)
-    leaves = [_decode_leaf(l) for l in payload[b"leaves"]]
+    leaves = [_decode_leaf(leaf) for leaf in payload[b"leaves"]]
     _, treedef = jax.tree.flatten(template)
     tree = jax.tree.unflatten(treedef, leaves)
     # cast to template dtypes (bf16 params etc.)

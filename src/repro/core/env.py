@@ -16,7 +16,7 @@ Trained policies are *evaluated* in the full discrete-event simulator
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

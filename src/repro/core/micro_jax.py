@@ -26,6 +26,7 @@ un-interpreted on real TPUs) via ``fused=True``.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Tuple
 
 import jax
@@ -33,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
+from repro.analysis import sanitize
 from repro.core.micro_state import EMPTY, LocalityState
 from repro.obs import runtime as obs_rt
 
@@ -348,17 +350,39 @@ def _switch_consts():
     return _WARM_HIT_S, MODEL_SWITCH_S
 
 
-@jax.jit
-def _scan_assign_multi(tflops, mem_s, kind_s, util0, cur_model, warm_srv,
-                       switch_scale, active, proj0, speed, l_mids,
-                       l_slots, l_emb, l_nrm, t_mids, t_kinds, t_mem,
-                       t_work, t_embeds, t_norms, t_has, n_real, t,
-                       slot_s):
+def _scan_assign_multi_impl(tflops, mem_s, kind_s, util0, cur_model,
+                            warm_srv, switch_scale, active, proj0, speed,
+                            l_mids, l_slots, l_emb, l_nrm, t_mids,
+                            t_kinds, t_mem, t_work, t_embeds, t_norms,
+                            t_has, n_real, t, slot_s, *,
+                            checks: bool = False):
     """The fused multi-region greedy.  Server operands are (R, S_pad),
     task operands (R, N_pad); the scan walks the task axis once and each
     step does whole-(R, S) work: static Eq 7-9 row build, Eq-10 locality
     vs the carried rings, eligibility/argmax, projected-queue push and
-    the per-region ring push of the chosen server."""
+    the per-region ring push of the chosen server.
+
+    ``checks=True`` (the ``REPRO_SANITIZE=1`` variant, compiled through
+    ``checkify``) validates the carried ring state and queue inputs
+    before the scan; ``checks=False`` is the production path and is
+    bitwise identical to the historical kernel."""
+    if checks:
+        from jax.experimental import checkify
+        checkify.check(
+            jnp.all((l_mids == EMPTY) | (l_mids >= 0)),
+            "sanitize: ring mids carry a corrupt model id "
+            "(negative but not EMPTY)")
+        checkify.check(jnp.all(l_slots >= 0),
+                       "sanitize: ring slot timestamps went negative")
+        checkify.check(jnp.all(proj0 >= 0.0),
+                       "sanitize: negative projected queue depth fed to "
+                       "the fused scan")
+        checkify.check(jnp.all(jnp.isfinite(l_emb)),
+                       "sanitize: non-finite ring embedding entering the "
+                       "locality dot")
+        checkify.check(jnp.all(jnp.isfinite(t_embeds)),
+                       "sanitize: non-finite task embedding entering the "
+                       "locality dot")
     _, _, w_loc, w_warm, _ = _loc_consts()
     w_hw, w_load, demand_by_kind = _hw_consts()
     warm_hit_s, model_switch_s = _switch_consts()
@@ -444,6 +468,16 @@ def _scan_assign_multi(tflops, mem_s, kind_s, util0, cur_model, warm_srv,
     return out.T, lm, ls, le, ln                             # out: (R, N_pad)
 
 
+# Production entry: checks=False compiles to the exact historical jaxpr.
+_scan_assign_multi = jax.jit(
+    functools.partial(_scan_assign_multi_impl, checks=False))
+# Sanitized entry: module-level partial so sanitize.checkified's cache
+# sees a stable identity (one checkify compile per process, not per call).
+_scan_assign_multi_checked = functools.partial(_scan_assign_multi_impl,
+                                               checks=True)
+_SCAN_ALL_ERRORS = "index|float|user"
+
+
 def server_pad_map(region_ptr: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     """(R, S_pad) global-index map + validity mask for the padded server
     axis (padded entries alias global index 0 but are masked inactive)."""
@@ -494,8 +528,14 @@ def assign_scan_all(alloc, obs, ridx_rows: np.ndarray, *, mem_t, work, mids,
         out[ridx_rows, pos] = values
         return out
 
+    if sanitize.enabled():
+        scan_fn = sanitize.checkified(_scan_assign_multi_checked,
+                                      errors=_SCAN_ALL_ERRORS)
+        obs_rt.count("micro.sanitize.scan_all")
+    else:
+        scan_fn = _scan_assign_multi
     with enable_x64(True):
-        out, lm, ls, le, ln = _scan_assign_multi(
+        out, lm, ls, le, ln = scan_fn(
             jnp.asarray(st.tflops[gmap]), jnp.asarray(st.mem_gb[gmap]),
             jnp.asarray(st.kind_id[gmap].astype(np.int32)),
             jnp.asarray(st.util[gmap]),

@@ -47,7 +47,7 @@ def loss_fn(params: Tree, hist: jax.Array, target: jax.Array,
             l2: float = 1e-4) -> jax.Array:
     pred = predict(params, hist)
     mse = jnp.mean(jnp.sum(jnp.square(pred - target), axis=-1))
-    reg = sum(jnp.sum(jnp.square(l["w"])) for l in params)
+    reg = sum(jnp.sum(jnp.square(layer["w"])) for layer in params)
     return mse + l2 * reg
 
 
@@ -85,10 +85,10 @@ class PredictorTrainer:
             ep = 0.0
             for i in range(0, n, batch):
                 idx = order[i:i + batch]
-                self.params, self.opt_state, l = self._step(
+                self.params, self.opt_state, loss = self._step(
                     self.params, self.opt_state,
                     jnp.asarray(hist[idx]), jnp.asarray(target[idx]))
-                ep += float(l) * len(idx)
+                ep += float(loss) * len(idx)
             losses.append(ep / n)
         return losses
 

@@ -4,7 +4,7 @@ condition  (1 - 1/s)/eps > (L_R + beta*L_P) / (alpha*K0)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable
 
 import numpy as np
 

@@ -13,7 +13,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import compiler_params as _compiler_params
 
@@ -46,7 +45,8 @@ def _kernel(mu_ref, nu_ref, c_ref, p_ref, *, n_iters: int, reg: float):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n_iters", "block_b", "interpret"))
+                   static_argnames=("reg", "n_iters", "block_b",
+                                    "interpret"))
 def sinkhorn_batched(mu: jax.Array, nu: jax.Array, cost: jax.Array, *,
                      reg: float = 0.05, n_iters: int = 100,
                      block_b: int = 8, interpret: bool = False) -> jax.Array:

@@ -33,7 +33,8 @@ from repro.optim.adam import Adam
 from repro.serving.steps import make_prefill_step, make_serve_step, make_train_step
 from repro.sharding.specs import AxisRules
 
-_is_p = lambda x: isinstance(x, P)
+def _is_p(x):
+    return isinstance(x, P)
 
 # FSDP decision: bytes/chip under pure TP beyond this budget -> shard big
 # weights over the data axis too (ZeRO-style storage sharding).

@@ -12,7 +12,6 @@ the standard ring-cost factors:
 """
 from __future__ import annotations
 
-import math
 import re
 from collections import defaultdict
 from typing import Any, Dict, Optional

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import ArchConfig, RunShape
+from repro.configs import RunShape
 from repro.models.model import Model
 from repro.sharding.specs import AxisRules, batch_axes
 

@@ -12,7 +12,7 @@ params, D = tokens processed.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 from repro.configs import ArchConfig, RunShape, active_param_count
 

@@ -150,7 +150,7 @@ def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         qblk, qp = qr[:, qi], qpr[qi]            # (B, qc, KH, G, hd), (qc,)
 
         def kv_step(carry, ki):
-            m, l, acc = carry
+            m, lse, acc = carry
             kblk, vblk, kp = kr[:, ki], vr[:, ki], kpr[ki]
             bias = _mask_bias(qp, kp, causal=causal, window=window,
                               prefix_len=prefix_len,
@@ -161,17 +161,18 @@ def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             m_new = jnp.maximum(m, s.max(-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l_new = l * corr + p.sum(-1)
+            lse_new = lse * corr + p.sum(-1)
             pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(vblk.dtype), vblk,
                             preferred_element_type=jnp.float32)
             acc_new = acc * corr[..., None] + pv
-            return (m_new, l_new, acc_new), None
+            return (m_new, lse_new, acc_new), None
 
         m0 = jnp.full((B, KH, G, qc), NEG_INF, jnp.float32)
         l0 = jnp.zeros((B, KH, G, qc), jnp.float32)
         a0 = jnp.zeros((B, KH, G, qc, hd), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(n_k))
-        out = acc / jnp.maximum(l, 1e-30)[..., None]   # (B, KH, G, qc, hd)
+        (m, lse, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                        jnp.arange(n_k))
+        out = acc / jnp.maximum(lse, 1e-30)[..., None]  # (B, KH, G, qc, hd)
         return _, out.astype(q.dtype)
 
     _, outs = jax.lax.scan(q_step, None, jnp.arange(n_q))

@@ -25,9 +25,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from repro.models._compat import shard_map
-
 from repro.configs import ArchConfig, MoEConfig
+from repro.models._compat import shard_map
 from repro.models.params import ParamDesc
 from repro.sharding.specs import AxisRules, batch_axes
 

@@ -15,7 +15,6 @@ nested inside an instrumented run records into its own obs (or nothing).
 from __future__ import annotations
 
 import contextlib
-from typing import Optional
 
 from repro.obs.trace import NULL_SPAN
 

@@ -31,6 +31,19 @@ DEFAULT_WINDOW = 16
 PERCENTILES = (50, 95, 99)
 
 
+def finite_or_nan(x):
+    """Exported-value guard: ±inf (a divide-by-zero or overflow artifact
+    upstream) becomes nan, so every exported series/summary value is
+    either finite or an explicit "no data" nan — never an infinity that
+    JSON serializes as ``Infinity`` and plots/aggregations silently eat.
+    Finite values pass through bitwise untouched."""
+    arr = np.asarray(x, np.float64)
+    if np.isinf(arr).any():
+        arr = np.where(np.isinf(arr), np.nan, arr)
+        return arr if arr.ndim else float(arr)
+    return x
+
+
 def windowed_percentiles(per_slot_values: List[np.ndarray],
                          window: int = DEFAULT_WINDOW,
                          percentiles=PERCENTILES) -> np.ndarray:
@@ -89,7 +102,8 @@ class SeriesRecorder:
         """Record one slot.  ``responses`` is THIS slot's completion
         response times; ``saturation`` is the per-region active/total
         server fraction at slot close."""
-        responses = np.asarray(responses, np.float64)
+        responses = np.asarray(finite_or_nan(
+            np.asarray(responses, np.float64)), np.float64)
         self._window_responses.append(responses)
         flat = (np.concatenate(self._window_responses)
                 if self._window_responses else np.zeros(0))
@@ -123,22 +137,29 @@ class SeriesRecorder:
 
     def timeseries(self) -> Dict[str, np.ndarray]:
         """All channels as arrays: scalar channels ``(T,)``, regional
-        channels ``(T, R)``."""
-        stack = (lambda rows: np.stack(rows) if rows
-                 else np.zeros((0, self.n_regions)))
+        channels ``(T, R)``.  Float channels are finite-or-nan (the
+        export contract: no infinities ever leave the recorder)."""
+        def stack(rows):
+            return (np.stack(rows) if rows
+                    else np.zeros((0, self.n_regions)))
+
+        def guard(x):
+            return np.asarray(finite_or_nan(np.asarray(x, np.float64)),
+                              np.float64)
+
         return {
             "slot": np.asarray(self.slots, np.int64),
-            "p50_response_s": np.asarray(self.p50_response_s),
-            "p95_response_s": np.asarray(self.p95_response_s),
-            "p99_response_s": np.asarray(self.p99_response_s),
-            "queue_depth": np.asarray(self.queue_depth),
+            "p50_response_s": guard(self.p50_response_s),
+            "p95_response_s": guard(self.p95_response_s),
+            "p99_response_s": guard(self.p99_response_s),
+            "queue_depth": guard(self.queue_depth),
             "completions": np.asarray(self.completions, np.int64),
             "drops": np.asarray(self.drops, np.int64),
-            "drop_rate": np.asarray(self.drop_rate),
-            "load_balance": np.asarray(self.load_balance),
-            "arrivals": stack(self.arrivals),
-            "forecast": stack(self.forecast),
-            "saturation": stack(self.saturation),
+            "drop_rate": guard(self.drop_rate),
+            "load_balance": guard(self.load_balance),
+            "arrivals": guard(stack(self.arrivals)),
+            "forecast": guard(stack(self.forecast)),
+            "saturation": guard(stack(self.saturation)),
         }
 
     # ------------------------------------------------------------ export

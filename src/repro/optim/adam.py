@@ -36,7 +36,8 @@ class Adam:
     grad_clip: Optional[float] = None
 
     def init(self, params: Tree) -> AdamState:
-        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def zeros(p):
+            return jnp.zeros(p.shape, jnp.float32)
         return AdamState(jnp.zeros((), jnp.int32),
                          jax.tree.map(zeros, params),
                          jax.tree.map(zeros, params))
@@ -47,7 +48,8 @@ class Adam:
             grads = clip_by_global_norm(grads, self.grad_clip)
         step = state.step + 1
         b1, b2 = self.b1, self.b2
-        f32 = lambda g: g.astype(jnp.float32)
+        def f32(g):
+            return g.astype(jnp.float32)
         m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * f32(g),
                          state.m, grads)
         v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * jnp.square(f32(g)),

@@ -1,8 +1,9 @@
-from repro.sim.topology import Topology, make_topology, TOPOLOGY_SPECS
 from repro.sim.cluster import (GPU_TYPES, Cluster, Region, Server,
                                make_cluster, task_profile)
+from repro.sim.engine import Engine, SlotDecision, SlotObs
+from repro.sim.metrics import (MetricsAggregator, load_balance_coefficient,
+                               prediction_accuracy)
 from repro.sim.state import (ACTIVE, OFF, WARMING, ClusterState,
                              make_cluster_state)
+from repro.sim.topology import TOPOLOGY_SPECS, Topology, make_topology
 from repro.sim.workload import Task, Workload, generate_traffic, make_workload
-from repro.sim.engine import Engine, SlotObs, SlotDecision
-from repro.sim.metrics import MetricsAggregator, load_balance_coefficient, prediction_accuracy

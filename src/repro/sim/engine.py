@@ -46,6 +46,7 @@ it on a seeded configuration.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Dict, List, Optional, Tuple, Union
 
@@ -106,6 +107,7 @@ class Engine:
                  seed: int = 0,
                  batch_mode: Optional[bool] = None,
                  step_backend: str = "numpy",
+                 sanitize: bool = False,
                  obs=None):
         TaskBatch, as_source = _workload_api()
         self._TaskBatch = TaskBatch
@@ -125,6 +127,9 @@ class Engine:
         if step_backend not in ("numpy", "jax"):
             raise ValueError(f"unknown step backend: {step_backend!r}")
         self.step_backend = step_backend
+        # checkify-instrumented jitted kernels for this engine's runs
+        # (equivalent to REPRO_SANITIZE=1 scoped to the run loop)
+        self.sanitize = bool(sanitize)
         self._stepper = None
         if step_backend == "jax":
             from repro.sim.engine_jax import JaxStepper
@@ -494,7 +499,10 @@ class Engine:
         self.scheduler.reset()
         if self.obs is not None:
             self.obs.begin_run(self.state.n_regions, self.slot_s)
-        with obs_rt.activate(self.obs):
+        from repro.analysis import sanitize as sanitize_rt
+        with obs_rt.activate(self.obs), \
+                sanitize_rt.force(True) if self.sanitize \
+                else contextlib.nullcontext():
             self._run_loop(t_total)
         if self.obs is not None:
             self.run_report = self.obs.report(

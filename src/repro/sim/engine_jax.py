@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
+from repro.analysis import sanitize
 from repro.obs import runtime as obs_rt
 from repro.sim.cluster import SWITCH_POWER_FRAC
 from repro.sim.state import (ACTIVE, NO_MODEL, WARM_SLOTS, WARMING,
@@ -107,10 +108,15 @@ class EngineStep:
             getattr(st, name)[...] = np.asarray(getattr(self, name))
 
 
-@jax.jit
-def warm_step(step: EngineStep, slot_s) -> EngineStep:
+def warm_step_impl(step: EngineStep, slot_s, *,
+                   checks: bool = False) -> EngineStep:
     """Warming servers progress toward ACTIVE (whole-array, exact
     ``Engine._progress_warming`` semantics)."""
+    if checks:
+        from jax.experimental import checkify
+        checkify.check(jnp.all(step.warm_remaining_s >= 0.0),
+                       "sanitize: negative warming clock entering "
+                       "warm_step")
     warming = step.state == WARMING
     rem = jnp.where(warming, step.warm_remaining_s - slot_s,
                     step.warm_remaining_s)
@@ -121,12 +127,27 @@ def warm_step(step: EngineStep, slot_s) -> EngineStep:
         warm_remaining_s=jnp.where(done, 0.0, rem))
 
 
-@jax.jit
-def apply_single(step: EngineStep, gs, mids, work_raw, valid):
+def apply_single_impl(step: EngineStep, gs, mids, work_raw, valid, *,
+                      checks: bool = False):
     """Grouped apply for servers receiving exactly one task: returns the
     updated step plus the per-row (switch s, energy J, wait s, work s)
     channels.  Rows are padded to a shape bucket; padded rows carry
-    ``gs == n_servers`` and scatter with ``mode="drop"``."""
+    ``gs == n_servers`` and scatter with ``mode="drop"`` — which is why
+    the sanitized variant runs user+float checks but NOT index_checks
+    (the padding is deliberately out of bounds)."""
+    if checks:
+        from jax.experimental import checkify
+        n_servers = step.speed.shape[0]
+        checkify.check(jnp.all(gs >= 0),
+                       "sanitize: negative server id in grouped apply")
+        checkify.check(jnp.all(~valid | (gs < n_servers)),
+                       "sanitize: valid row targets an out-of-range "
+                       "server id in grouped apply")
+        checkify.check(jnp.all(step.queue_s >= 0.0),
+                       "sanitize: negative queue depth entering grouped "
+                       "apply")
+        checkify.check(jnp.all(~valid | (work_raw >= 0.0)),
+                       "sanitize: negative work seconds on a valid row")
     speed = step.speed[gs]
     rows = step.warm_models[gs]                       # (K, W) int16
     warm_hit = (rows == mids[:, None]).any(axis=1)
@@ -159,12 +180,18 @@ def apply_single(step: EngineStep, gs, mids, work_raw, valid):
     return step, sw, energy, wait, wk
 
 
-@jax.jit
-def close_step(step: EngineStep, slot_s):
+def close_step_impl(step: EngineStep, slot_s, *, checks: bool = False):
     """Queue drain + utilization/idle bookkeeping + per-server power
     draw (``Engine._finish_slot``'s whole-array block).  The per-region
     power reduction stays on the host (``ClusterState._segsum``'s
     sequential-within-segment order is the parity contract)."""
+    if checks:
+        from jax.experimental import checkify
+        checkify.check(slot_s > 0.0,
+                       "sanitize: non-positive slot length in close_step")
+        checkify.check(jnp.all(step.queue_s >= 0.0),
+                       "sanitize: negative queue depth entering "
+                       "close_step")
     act = step.state == ACTIVE
     busy = jnp.minimum(step.queue_s, slot_s)
     util = jnp.where(act, busy / slot_s, step.util)
@@ -176,6 +203,20 @@ def close_step(step: EngineStep, slot_s):
                         0.0)
     return dataclasses.replace(step, queue_s=queue, util=util,
                                idle_slots=idle), power_j, act
+
+
+# Production entries: checks=False compiles to the historical jaxprs.
+warm_step = jax.jit(partial(warm_step_impl, checks=False))
+apply_single = jax.jit(partial(apply_single_impl, checks=False))
+close_step = jax.jit(partial(close_step_impl, checks=False))
+# Sanitized variants: module-level partials give sanitize.checkified a
+# stable identity to cache the checkify compile under.  user+float only:
+# apply_single's padded rows are deliberately out of range for the
+# mode="drop" scatters, so index_checks would false-positive by design.
+_warm_step_checked = partial(warm_step_impl, checks=True)
+_apply_single_checked = partial(apply_single_impl, checks=True)
+_close_step_checked = partial(close_step_impl, checks=True)
+_ENGINE_ERRORS = "float|user"
 
 
 def row_bucket(n: int) -> int:
@@ -196,6 +237,21 @@ class JaxStepper:
         self.state = state
         self._static = None
 
+    @staticmethod
+    def _kernels():
+        """The (warm, apply, close) triple for the current sanitize
+        mode, resolved per dispatch so ``REPRO_SANITIZE`` /
+        ``sanitize.force`` flips take effect mid-process."""
+        if sanitize.enabled():
+            obs_rt.count("engine.sanitize.dispatch")
+            return (sanitize.checkified(_warm_step_checked,
+                                        errors=_ENGINE_ERRORS),
+                    sanitize.checkified(_apply_single_checked,
+                                        errors=_ENGINE_ERRORS),
+                    sanitize.checkified(_close_step_checked,
+                                        errors=_ENGINE_ERRORS))
+        return warm_step, apply_single, close_step
+
     def _make_step(self) -> EngineStep:
         if self._static is None:
             with enable_x64(True):
@@ -209,9 +265,10 @@ class JaxStepper:
         obs_rt.count_new_shape("engine.retrace.warm_step",
                                str(st.n_servers))
         obs_rt.count("engine.host_sync.warm_step")
+        warm_fn, _, _ = self._kernels()
         with enable_x64(True):
-            step = warm_step(self._make_step(),
-                             jnp.asarray(np.float64(slot_s)))
+            step = warm_fn(self._make_step(),
+                           jnp.asarray(np.float64(slot_s)))
             step.write_back(st, fields=("state", "warm_remaining_s"))
 
     def apply_single_rows(self, gs: np.ndarray, mids: np.ndarray,
@@ -232,8 +289,9 @@ class JaxStepper:
         mids_p = np.pad(mids.astype(np.int32), (0, pad))
         work_p = np.pad(work_raw.astype(np.float64), (0, pad))
         valid = np.pad(np.ones(k, bool), (0, pad))
+        _, apply_fn, _ = self._kernels()
         with enable_x64(True):
-            step, sw, energy, wait, wk = apply_single(
+            step, sw, energy, wait, wk = apply_fn(
                 self._make_step(), jnp.asarray(gs_p),
                 jnp.asarray(mids_p), jnp.asarray(work_p),
                 jnp.asarray(valid))
@@ -249,8 +307,9 @@ class JaxStepper:
         obs_rt.count_new_shape("engine.retrace.close_step",
                                str(st.n_servers))
         obs_rt.count("engine.host_sync.close_step")
+        _, _, close_fn = self._kernels()
         with enable_x64(True):
-            step, power_j, act = close_step(
+            step, power_j, act = close_fn(
                 self._make_step(), jnp.asarray(np.float64(slot_s)))
             step.write_back(st, fields=("queue_s", "util", "idle_slots"))
             return np.asarray(power_j), np.asarray(act)

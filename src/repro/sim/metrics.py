@@ -7,6 +7,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.obs.series import finite_or_nan
+
 
 def load_balance_coefficient(utils: np.ndarray) -> float:
     """Eq 11: LB = 1 / (1 + CV) over active-server utilizations."""
@@ -62,11 +64,14 @@ class MetricsAggregator:
     def record_completions(self, t: int, wait_s, work_s, net_s) -> None:
         """Bulk completion record for the engine's grouped apply (same
         per-task values as ``record_completion``, appended in one go)."""
-        wait = np.asarray(wait_s, np.float64)
+        wait = np.asarray(finite_or_nan(np.asarray(wait_s, np.float64)),
+                          np.float64)
         if wait.size == 0:
             return
-        work = np.asarray(work_s, np.float64)
-        net = np.asarray(net_s, np.float64)
+        work = np.asarray(finite_or_nan(np.asarray(work_s, np.float64)),
+                          np.float64)
+        net = np.asarray(finite_or_nan(np.asarray(net_s, np.float64)),
+                         np.float64)
         self.completed += int(wait.size)
         self.response_times.extend((wait + work + net).tolist())
         self.wait_times.extend(wait.tolist())
@@ -111,7 +116,7 @@ class MetricsAggregator:
         # an all-dropping run score best-in-class
         nan = float("nan")
         rt = np.array(self.response_times) if self.response_times else None
-        return {
+        out = {
             "mean_response_s": float(rt.mean()) if rt is not None else nan,
             "p50_response_s": float(np.percentile(rt, 50)) if rt is not None else nan,
             "p95_response_s": float(np.percentile(rt, 95)) if rt is not None else nan,
@@ -132,3 +137,7 @@ class MetricsAggregator:
             "mean_queue_tasks": float(np.mean(self.queue_by_slot))
             if self.queue_by_slot else 0.0,
         }
+        # export contract: every summary value is finite or nan, never
+        # inf (an inf here is an upstream divide-by-zero, not a metric)
+        return {k: (finite_or_nan(v) if isinstance(v, float) else v)
+                for k, v in out.items()}

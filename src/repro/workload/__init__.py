@@ -11,11 +11,11 @@ from repro.workload.batch import (EMBED_DIM, MODEL_KIND_ID, MODEL_MEM_GB,
                                   MODEL_WORK_S, TaskBatch, zipf_model_mix)
 from repro.workload.legacy import (Task, Workload, generate_traffic,
                                    make_workload)
+from repro.workload.scenarios import (get_scenario, list_scenarios,
+                                      make_source, register_scenario)
 from repro.workload.stream import (LegacySource, StreamingWorkload,
                                    as_source, to_legacy_workload)
 from repro.workload.trace import DEFAULT_TRACE, load_trace, resample_trace
-from repro.workload.scenarios import (get_scenario, list_scenarios,
-                                      make_source, register_scenario)
 
 __all__ = [
     "EMBED_DIM", "MODEL_KIND_ID", "MODEL_MEM_GB", "MODEL_WORK_S",

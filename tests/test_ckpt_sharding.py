@@ -1,0 +1,120 @@
+"""Checkpoint round-trips (``repro/checkpoint/ckpt.py``) and mesh-axis
+rule/spec shapes (``repro/sharding/specs.py``)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.ckpt import (latest_step, load_checkpoint,
+                                   save_checkpoint)
+from repro.sharding.specs import (AxisRules, batch_axes, constrain, named,
+                                  shard_axis)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {
+        "params": {
+            "w": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "b": np.zeros(4, np.float64),
+            "emb": np.arange(6, dtype=np.int32).reshape(2, 3),
+        },
+        "opt": [np.ones(3, np.float32), np.full(2, 7, np.int64)],
+        "scalar": 3,
+    }
+
+
+def test_ckpt_round_trip(tmp_path):
+    tree = _tree()
+    fn = save_checkpoint(str(tmp_path), 5, tree)
+    assert fn.endswith("ckpt_00000005.msgpack")
+    step, loaded = load_checkpoint(str(tmp_path), tree)
+    assert step == 5
+    np.testing.assert_array_equal(loaded["params"]["w"],
+                                  tree["params"]["w"])
+    np.testing.assert_array_equal(loaded["params"]["emb"],
+                                  tree["params"]["emb"])
+    np.testing.assert_array_equal(loaded["opt"][1], tree["opt"][1])
+    assert loaded["scalar"] == 3
+    # atomic write: no .tmp file survives
+    assert not list(tmp_path.glob("*.tmp"))
+
+
+def test_ckpt_latest_step_and_explicit(tmp_path):
+    tree = _tree()
+    assert latest_step(str(tmp_path)) is None
+    for s in (1, 12, 7):
+        save_checkpoint(str(tmp_path), s, tree)
+    assert latest_step(str(tmp_path)) == 12
+    step, _ = load_checkpoint(str(tmp_path), tree)       # implicit latest
+    assert step == 12
+    step, _ = load_checkpoint(str(tmp_path), tree, step=7)
+    assert step == 7
+
+
+def test_ckpt_casts_to_template_dtype(tmp_path):
+    """Loading into a template with different leaf dtypes casts (bf16
+    params restored from an f32 save)."""
+    save_checkpoint(str(tmp_path), 0, {"w": np.ones((2, 2), np.float32)})
+    template = {"w": jnp.ones((2, 2), jnp.bfloat16)}
+    _, loaded = load_checkpoint(str(tmp_path), template)
+    assert loaded["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(loaded["w"], np.float32),
+                                  np.ones((2, 2), np.float32))
+
+
+def test_ckpt_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError, match="no checkpoints"):
+        load_checkpoint(str(tmp_path / "empty"), {"x": np.zeros(1)})
+
+
+# ---------------------------------------------------------------------------
+# sharding rules / spec shapes
+# ---------------------------------------------------------------------------
+
+
+def _mesh(axis_names):
+    devs = np.array(jax.devices("cpu")[:1]).reshape(
+        (1,) * len(axis_names))
+    return Mesh(devs, axis_names)
+
+
+def test_axis_rules_no_mesh():
+    rules = AxisRules()
+    assert rules.axis_size("model") == 1
+    assert rules.axis_size(("pod", "data")) == 1
+    assert not rules.divisible(8, "model")
+    assert rules.data_axes == ("data",)
+    assert batch_axes(rules) == "data"
+    # documentation mode: specs still name the intended axis
+    assert shard_axis(rules, 128, "model") == "model"
+    assert named(rules, P("data")) is None
+    x = jnp.ones((4, 4))
+    assert constrain(x, rules, P("data", None)) is x
+
+
+def test_axis_rules_with_mesh():
+    rules = AxisRules(mesh=_mesh(("data", "model")))
+    assert rules.data_axes == ("data",)
+    assert rules.axis_size("model") == 1
+    assert rules.axis_size("absent") == 1
+    # size-1 axes never shard (divisible demands size > 1)
+    assert shard_axis(rules, 128, "model") is None
+    sh = named(rules, P(None, "model"))
+    assert isinstance(sh, NamedSharding)
+    assert sh.spec == P(None, "model")
+    # single-device mesh: constraint is a no-op passthrough
+    x = jnp.ones((4, 4))
+    assert constrain(x, rules, P("data", None)) is x
+
+
+def test_axis_rules_pod_axis():
+    rules = AxisRules(mesh=_mesh(("pod", "data", "model")))
+    assert rules.data_axes == ("pod", "data")
+    assert batch_axes(rules) == ("pod", "data")
+    assert rules.axis_size(("pod", "data")) == 1

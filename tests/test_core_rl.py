@@ -4,12 +4,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.env import (EnvParams, env_obs, env_reset, env_step,
-                            make_env_params, obs_dim)
 from repro.core import policy as pol
+from repro.core.env import (env_obs, env_reset, env_step, make_env_params,
+                            obs_dim)
 from repro.core.ppo import PPOTrainer, collect_rollout
-from repro.core.predictor import (EmaPredictor, PredictorTrainer, make_dataset,
-                                  predict)
+from repro.core.predictor import (EmaPredictor, PredictorTrainer,
+                                  make_dataset)
 from repro.sim.metrics import prediction_accuracy
 
 

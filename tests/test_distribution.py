@@ -10,9 +10,9 @@ import textwrap
 import numpy as np
 import pytest
 
+from repro.configs import SHAPES, get_config
 from repro.launch.hlo_analysis import parse_collectives, shape_bytes
 from repro.launch.roofline import Roofline, analytic_costs, model_flops
-from repro.configs import SHAPES, get_config
 
 
 def test_shape_bytes():

@@ -3,7 +3,6 @@ jitted step backend, multi-region-scan assignment parity vs the per-region
 scan, device-array ``BatchDecision`` round-trips, and the satellite
 regressions (``make_dataset`` vectorization, ``prev_nu`` staleness,
 arrivals-history buffering)."""
-import copy
 
 import networkx as nx
 import numpy as np

@@ -1,6 +1,5 @@
 """Layer-level properties: RoPE, norms, flash-style attention vs naive,
 MoE local dispatch."""
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -387,3 +387,63 @@ def test_fused_run_report_acceptance():
     starts = [r.t_start for r in eng.obs.tracer.records]
     assert starts == sorted(starts)
     assert all(r.duration_s >= 0 for r in eng.obs.tracer.records)
+
+
+# ---------------------------------------------------------------------------
+# export guard: series/summary values are finite or nan, never inf
+# ---------------------------------------------------------------------------
+
+
+def test_series_exports_are_finite_or_nan():
+    """Infinities injected into every SeriesRecorder channel (upstream
+    divide-by-zero artifacts) must export as nan — the finite-or-nan
+    contract of ``timeseries()``."""
+    from repro.obs.series import SeriesRecorder
+
+    rec = SeriesRecorder(2)
+    rec.note_forecast(np.array([np.inf, 1.0]))
+    rec.end_slot(0, responses=np.array([np.inf, 3.0]),
+                 queue_tasks=np.inf, arrivals=np.array([1.0, np.inf]),
+                 drops=0, saturation=np.array([0.5, -np.inf]),
+                 load_balance=np.inf)
+    rec.end_slot(1, responses=np.array([1.0, 2.0]), queue_tasks=4.0,
+                 arrivals=np.array([2.0, 2.0]), drops=1,
+                 saturation=np.array([0.5, 0.5]), load_balance=0.9)
+    ts = rec.timeseries()
+    for name, arr in ts.items():
+        assert not np.isinf(np.asarray(arr, np.float64)).any(), name
+    # finite slots pass through untouched
+    assert ts["queue_depth"][1] == 4.0
+    assert ts["load_balance"][1] == 0.9
+    # jsonl export never writes Infinity
+    import json as _json
+    rows = list(rec._rows())
+    for row in rows:
+        text = _json.dumps(row, default=float)
+        assert "Infinity" not in text, text
+
+
+def test_metrics_summary_finite_or_nan():
+    """MetricsAggregator.summary() converts inf artifacts to nan while
+    finite metrics stay bitwise identical."""
+    from repro.sim.metrics import MetricsAggregator
+
+    m = MetricsAggregator()
+    m.record_completions(0, wait_s=[1.0, np.inf], work_s=[2.0, 3.0],
+                         net_s=[0.0, 0.0])
+    m.record_slot(0, utils=np.array([0.5, 0.5]), power_cost=np.inf,
+                  switch_cost=1.0, overhead_s=0.0, n_switches=0,
+                  queue_tasks=2.0)
+    s = m.summary()
+    for key, value in s.items():
+        if isinstance(value, float):
+            assert not np.isinf(value), key
+    assert s["switch_cost_total"] == 1.0
+    assert s["completed"] == 2
+
+    # clean aggregator: bitwise identical summaries with the guard
+    clean = MetricsAggregator()
+    clean.record_completions(0, wait_s=[1.0, 2.0], work_s=[2.0, 3.0],
+                             net_s=[0.0, 0.5])
+    assert clean.summary() == clean.summary()
+    assert clean.summary()["mean_wait_s"] == 1.5

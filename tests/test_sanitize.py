@@ -1,0 +1,162 @@
+"""REPRO_SANITIZE / ``Engine(sanitize=True)`` — the checkify-instrumented
+hot path: seeded fault injection (corrupt ring ids, NaN embeddings,
+negative queues) must raise under the sanitizer and pass silently on the
+unguarded path, while the sanitized variant stays bitwise identical to
+production on clean inputs."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import sanitize
+from repro.core.micro import MicroAllocator
+from repro.sim import make_cluster_state
+from repro.sim.engine_jax import JaxStepper
+from repro.workload import make_source
+
+from test_fused_step import _obs, _world
+
+
+def _fused_world(seed=5, r=2, spr=6):
+    cs, rng = _world(r, spr, seed)
+    alloc = MicroAllocator(backend="fused")
+    src = make_source("diurnal", 3, r, seed=seed, base_rate=8.0)
+    batch = src.slot_batch(0)
+    region_of = rng.integers(0, r, len(batch)).astype(np.int32)
+    return cs, alloc, batch, region_of
+
+
+def _corrupt_rings(alloc, **cols):
+    """Rewrite one cell of the carried device rings (fault injection)."""
+    rings = alloc._dev_rings
+    repl = {}
+    for name, value in cols.items():
+        arr = np.asarray(getattr(rings, name)).copy()
+        arr[0, 0, 0] = value
+        repl[name] = jnp.asarray(arr)
+    alloc._dev_rings = dataclasses.replace(rings, **repl)
+
+
+def _prime(cs, alloc, batch, region_of):
+    """One clean slot to populate the rings."""
+    out = alloc.assign_batch_all(_obs(cs, 0), batch, region_of)
+    assert (out != -1).any()
+
+
+def test_sanitize_catches_corrupt_ring_index():
+    """A ring model id smashed to -7 (not EMPTY, not valid) trips the
+    sanitized scan; the unguarded path silently computes garbage."""
+    cs, alloc, batch, region_of = _fused_world(seed=7)
+    _prime(cs, alloc, batch, region_of)
+    _corrupt_rings(alloc, mids=-7)
+    with sanitize.force():
+        with pytest.raises(Exception, match="corrupt model id"):
+            alloc.assign_batch_all(_obs(cs, 1), batch, region_of)
+    # same corrupt state, unguarded: no error, an answer comes back
+    _corrupt_rings(alloc, mids=-7)
+    out = alloc.assign_batch_all(_obs(cs, 1), batch, region_of)
+    assert out.shape == (len(batch),)
+
+
+def test_sanitize_catches_nan_embedding():
+    """A NaN planted in the carried ring embeddings poisons locality
+    scores; checkify flags it, the unguarded path propagates silently."""
+    cs, alloc, batch, region_of = _fused_world(seed=11)
+    _prime(cs, alloc, batch, region_of)
+    _corrupt_rings(alloc, embeds=np.nan)
+    with sanitize.force():
+        with pytest.raises(Exception, match="non-finite ring embedding"):
+            alloc.assign_batch_all(_obs(cs, 1), batch, region_of)
+    _corrupt_rings(alloc, embeds=np.nan)
+    out = alloc.assign_batch_all(_obs(cs, 1), batch, region_of)
+    assert out.shape == (len(batch),)
+
+
+def test_sanitized_scan_bitwise_parity():
+    """On clean inputs the checkified scan returns bit-identical
+    assignments and carried rings."""
+    outs, rings = [], []
+    for flag in (False, True):
+        cs, alloc, batch, region_of = _fused_world(seed=13)
+        with sanitize.force(flag):
+            got = [alloc.assign_batch_all(_obs(cs, t), batch, region_of)
+                   for t in range(3)]
+        outs.append(np.concatenate(got))
+        rings.append(alloc._dev_rings)
+    np.testing.assert_array_equal(outs[0], outs[1])
+    for name in ("mids", "slots", "embeds", "norms"):
+        np.testing.assert_array_equal(np.asarray(getattr(rings[0], name)),
+                                      np.asarray(getattr(rings[1], name)))
+
+
+def test_sanitize_catches_negative_queue_in_engine_step():
+    """A negative queue depth fed to the jitted close step trips the
+    engine sanitizer; the unguarded kernel drains it silently."""
+    cs, _ = _world(2, 5, seed=3)
+    cs.queue_s[0] = -5.0
+    power, act = JaxStepper(cs).close_slot(45.0)      # unguarded: silent
+    assert power.shape == (cs.n_servers,)
+    cs.queue_s[0] = -5.0
+    with sanitize.force():
+        with pytest.raises(Exception, match="negative queue depth"):
+            JaxStepper(cs).close_slot(45.0)
+
+
+def test_sanitize_catches_out_of_range_server_id():
+    """A valid row targeting a server id >= n_servers is the grouped
+    apply's corruption case (padding uses exactly n_servers and is
+    masked invalid); the sanitizer rejects it."""
+    cs, _ = _world(2, 5, seed=9)
+    cs.queue_s[:] = np.abs(cs.queue_s)
+    gs = np.array([cs.n_servers + 3], np.int64)       # out of range, valid
+    mids = np.array([1], np.int32)
+    work = np.array([10.0])
+    sw, energy, wait, wk = JaxStepper(cs).apply_single_rows(gs, mids, work)
+    assert np.isfinite(sw).all()                      # unguarded: silent
+    with sanitize.force():
+        with pytest.raises(Exception, match="out-of-range"):
+            JaxStepper(cs).apply_single_rows(gs, mids, work)
+
+
+def test_engine_sanitize_flag_bitwise_parity():
+    """``Engine(sanitize=True)`` scopes the sanitizer to the run loop and
+    changes no metric bit on a clean seeded fused run."""
+    from repro.core.torta import TortaScheduler
+    from repro.sim import Engine, make_topology, make_workload
+    from repro.sim.cluster import throughput_per_slot
+
+    def run(flag):
+        topo = make_topology("abilene", seed=1)
+        cs = make_cluster_state(topo.n_regions, seed=3)
+        rate = 0.3 * throughput_per_slot(cs) / topo.n_regions
+        wl = make_workload(4, topo.n_regions, seed=2, base_rate=rate)
+        return Engine(topo, cs.copy(), wl,
+                      TortaScheduler(topo.n_regions, seed=0,
+                                     micro_backend="fused"),
+                      seed=0, step_backend="jax",
+                      sanitize=flag).run(4).summary()
+
+    m0, m1 = run(False), run(True)
+    for k in m0:
+        assert m0[k] == m1[k] or (m0[k] != m0[k] and m1[k] != m1[k]), k
+    assert not sanitize.enabled()      # scope ended with the run
+
+
+def test_env_var_and_force_stack(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert not sanitize.enabled()
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert sanitize.enabled()
+    with sanitize.force(False):
+        assert not sanitize.enabled()
+        with sanitize.force(True):
+            assert sanitize.enabled()
+    assert sanitize.enabled()
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+    assert not sanitize.enabled()
+
+
+def test_checkified_rejects_unknown_error_set():
+    with pytest.raises(ValueError, match="unknown checkify error set"):
+        sanitize.checkified(lambda x: x, errors="bogus")

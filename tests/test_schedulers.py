@@ -1,7 +1,6 @@
 """Scheduler behaviour: baselines + TORTA end-to-end on the shared world."""
 import copy
 
-import numpy as np
 import pytest
 
 from repro.baselines import (ReactiveOTScheduler, RoundRobinScheduler,

@@ -1,5 +1,4 @@
 """Simulator invariants (hypothesis) + engine behaviour."""
-import copy
 
 import numpy as np
 import pytest
@@ -9,7 +8,7 @@ except ImportError:          # bare container: deterministic fallback shim
     from _hypofallback import given, settings, strategies as st
 
 from repro.baselines import RoundRobinScheduler
-from repro.sim import (Engine, make_cluster, make_topology, make_workload)
+from repro.sim import Engine
 from repro.sim.engine import FailureEvent
 from repro.sim.metrics import load_balance_coefficient, prediction_accuracy
 from repro.sim.topology import TOPOLOGY_SPECS, make_topology

@@ -1,5 +1,4 @@
 """Optimizer, data pipeline, checkpointing, losses, theory, MILP."""
-import os
 import tempfile
 
 import jax
@@ -7,16 +6,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 try:
-    from hypothesis import given, settings, strategies as st
+    from hypothesis import strategies as st
 except ImportError:          # bare container: deterministic fallback shim
-    from _hypofallback import given, settings, strategies as st
+    from _hypofallback import strategies as st
 
 from repro.baselines.milp import make_instance, solve
 from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
 from repro.core.theory import (AdvantageCondition, estimate_k0,
                                estimate_k0_from_reactive, estimate_lipschitz)
 from repro.data import SyntheticLMData
-from repro.optim import Adam, Sgd, apply_updates, clip_by_global_norm
+from repro.optim import Adam, apply_updates, clip_by_global_norm
 from repro.optim.schedules import cosine_decay, warmup_cosine
 from repro.serving.steps import lm_loss
 

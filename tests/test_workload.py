@@ -11,7 +11,7 @@ from repro.sim import Engine, make_cluster_state
 from repro.sim.cluster import MODEL_CATALOG, task_profile
 from repro.sim.state import KINDS, MODEL_NAMES
 from repro.sim.topology import Topology
-from repro.workload import (DEFAULT_TRACE, StreamingWorkload, TaskBatch,
+from repro.workload import (DEFAULT_TRACE, TaskBatch,
                             Workload, generate_traffic, get_scenario,
                             list_scenarios, load_trace, make_source,
                             make_workload, resample_trace,
